@@ -1,0 +1,496 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+"""Roofline analysis per (arch x shape) cell on the single-pod mesh.
+
+Derives the three terms from compiled artifacts (TPU v5e targets):
+
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory     = HLO_bytes / (chips * 819 GB/s)
+  collective = collective wire bytes / (chips * 50 GB/s per ICI link)
+
+``compiled.cost_analysis()`` counts a while-loop body once, so the ticked
+executors are costed per *pass*: each F/B/W (and src/sink/optimizer) pass is
+compiled standalone under a TP-16 shard_map, its FLOPs/bytes/collectives
+extracted, then multiplied by the schedule's static per-stage counts.  The
+per-tick channel permutes of the executor are added analytically
+(channels x ticks x activation bytes).  The bottleneck stage (loss stage,
+which also owns the LM head) defines the reported terms.
+
+Collective wire bytes per device use ring factors: all-reduce 2(n-1)/n x
+payload, all-gather / reduce-scatter (n-1)/n, permute 1.0.
+
+MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (prefill/decode) catches
+remat or redundancy waste via the ratio MODEL/HLO.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, cells_for
+from repro.core.schedules import compile_plan, zb_h2
+from repro.core.schedules.ir import Placement
+from repro.launch.dryrun import make_run_spec
+from repro.launch.mesh import AxisBinding, make_production_mesh
+from repro.launch.sharding_rules import stacked_param_specs, shared_param_specs
+from repro.models.lm import (
+    RunSpec,
+    build_program,
+    init_params,
+    side_inputs,
+    make_chunk_fn,
+)
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+_COLL_FACTORS = {
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64)\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+          "pred": 1, "f64": 8, "s64": 8}
+
+
+def collective_bytes(hlo_text: str, group_size: int) -> float:
+    """Sum wire bytes of collectives in (non-fused) HLO text."""
+    total = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(\S+)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        out_ty, op = m.group(1), m.group(2)
+        sm = _SHAPE_RE.search(out_ty)
+        if not sm:
+            continue
+        dty, dims = sm.group(1), sm.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        payload = n * _BYTES[dty]
+        total += payload * _COLL_FACTORS[op](group_size)
+    return total
+
+
+@dataclasses.dataclass
+class PassCost:
+    flops: float
+    bytes: float
+    coll: float
+
+
+def _cost_of(fn, mesh, in_specs, out_specs, args) -> PassCost:
+    wrapped = jax.jit(
+        shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    )
+    lowered = wrapped.lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    tp = mesh.devices.size
+    return PassCost(
+        flops=float(cost.get("flops", 0.0)),
+        bytes=float(cost.get("bytes accessed", 0.0)),
+        coll=collective_bytes(text, tp),
+    )
+
+
+def _sdt(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        if not isinstance(a, jax.ShapeDtypeStruct)
+        else a,
+        tree,
+    )
+
+
+def _localize(sdt_tree, spec_tree, axis_sizes: Dict[str, int]):
+    """Per-leaf local shard ShapeDtypeStructs for given PartitionSpecs."""
+
+    def one(sd, spec):
+        shape = list(sd.shape)
+        for i, part in enumerate(spec):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            for nm in names:
+                shape[i] //= axis_sizes[nm]
+        return jax.ShapeDtypeStruct(tuple(shape), sd.dtype)
+
+    return jax.tree_util.tree_map(
+        one, sdt_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def analyze_cell(
+    arch_id: str,
+    shape_id: str,
+    verbose=True,
+    b_override: Optional[int] = None,
+    shard_channels: bool = False,
+    wgrad_fused: bool = False,
+    schedule: str = "zb-h2",
+) -> Optional[dict]:
+    cfg = get_config(arch_id)
+    cell = SHAPES[shape_id]
+    mesh = jax.make_mesh((16,), ("model",))
+    binding = AxisBinding(pipe="data", tp="model", dp=None)
+
+    class FakeMesh:  # binding.sizes needs the production shape
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    spec = make_run_spec(cfg, cell, FakeMesh(), binding, schedule)
+    if b_override is not None and cell.kind == "train":
+        total = spec.m * spec.microbatch
+        spec = dataclasses.replace(
+            spec, microbatch=b_override, m=max(1, total // b_override)
+        )
+    p = 16
+    if cell.kind != "train":
+        placement = Placement.linear(p, spec.n_chunks)
+    elif schedule == "zb-v":
+        from repro.core.schedules import zb_v as _zbv
+
+        placement = _zbv(p, spec.m).placement
+    else:
+        placement = zb_h2(p, spec.m).placement
+    sdt_params = jax.eval_shape(lambda: init_params(cfg, spec, placement))
+    stacked_sdt, shared_sdt = sdt_params
+    # single-stage local params: drop the stage axis from the global shapes
+    stage_sdt = tuple(
+        jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), sp
+        )
+        for sp in stacked_sdt
+    )
+    stage_specs = tuple(
+        jax.tree_util.tree_map(lambda s: P(*s[1:]), sp)
+        for sp in stacked_param_specs(stacked_sdt, "data", "model")
+    )
+    shared_specs = shared_param_specs(shared_sdt, "model")
+
+    side_all = jax.eval_shape(lambda: side_inputs(cfg, spec))
+    side_mb = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), side_all
+    )
+    side_specs = jax.tree_util.tree_map(lambda _: P(), side_mb)
+
+    m, b = spec.m, spec.microbatch
+    s_total = side_mb["positions"].shape[0]
+    act = jax.ShapeDtypeStruct((b, s_total, cfg.d_model), cfg.jdtype())
+    act_bytes = int(np.prod(act.shape)) * act.dtype.itemsize
+
+    axis_sizes = {"model": 16}
+    stage_local = tuple(
+        _localize(sp, specs, axis_sizes)
+        for sp, specs in zip(stage_sdt, stage_specs)
+    )
+    shared_local = _localize(shared_sdt, shared_specs, axis_sizes)
+
+    if cell.kind == "train":
+        program = build_program(cfg, spec, placement)
+        mod = program.chunks[0]
+        # residual structures: trace the fwd *inside* shard_map (the layers
+        # contain model-axis collectives); out_specs P() => local shapes.
+        f_sm = shard_map(
+            lambda pr, x, sd: mod.fwd(pr, x, sd),
+            mesh=mesh,
+            in_specs=(stage_specs[0], P(), side_specs),
+            out_specs=P(),
+            check_rep=False,
+        )
+        y_sh, res_sh = jax.eval_shape(f_sm, stage_sdt[0], act, side_mb)
+        b_sm = shard_map(
+            lambda pr, r, g, sd: mod.bwd_x(pr, r, g, sd),
+            mesh=mesh,
+            in_specs=(stage_specs[0], P(), P(), side_specs),
+            out_specs=P(),
+            check_rep=False,
+        )
+        dx_sh, wctx_sh = jax.eval_shape(b_sm, stage_sdt[0], res_sh, act, side_mb)
+
+        cF = _cost_of(
+            lambda pr, x, sd: mod.fwd(pr, x, sd),
+            mesh, (stage_specs[0], P(), side_specs), P(),
+            (stage_sdt[0], act, side_mb),
+        )
+        cB = _cost_of(
+            lambda pr, r, g, sd: mod.bwd_x(pr, r, g, sd),
+            mesh, (stage_specs[0], P(), P(), side_specs), P(),
+            (stage_sdt[0], res_sh, act, side_mb),
+        )
+        cW = _cost_of(
+            lambda pr, r, w, sd: mod.bwd_w(pr, r, w, sd),
+            mesh, (stage_specs[0], P(), P(), side_specs), stage_specs[0],
+            (stage_sdt[0], res_sh, wctx_sh, side_mb),
+        )
+        # sink (final norm + head + CE) fwd+bwd on the loss stage
+        sink = program.sink
+        s_sm = shard_map(
+            lambda sh, y, sd: sink.fwd(sh, y, sd),
+            mesh=mesh,
+            in_specs=(shared_specs, P(), side_specs),
+            out_specs=P(),
+            check_rep=False,
+        )
+        loss_sh, sres_sh = jax.eval_shape(s_sm, shared_sdt, act, side_mb)
+        cSink = _cost_of(
+            lambda sh, y, sd: sink.fwd(sh, y, sd),
+            mesh, (shared_specs, P(), side_specs), P(),
+            (shared_sdt, act, side_mb),
+        )
+        ones = jax.ShapeDtypeStruct(loss_sh.shape, loss_sh.dtype)
+        cSinkB = _cost_of(
+            lambda sh, r, g, sd: sink.bwd_x(sh, r, g, sd),
+            mesh, (shared_specs, P(), P(), side_specs), P(),
+            (shared_sdt, sres_sh, ones, side_mb),
+        )
+        cSinkW = _cost_of(
+            lambda sh, r, g, sd: sink.bwd_w(sh, r, g, sd),
+            mesh, (shared_specs, P(), P(), side_specs), shared_specs,
+            (shared_sdt, sres_sh, ones, side_mb),
+        )
+        from repro.core.schedules import zb_v as _zbv
+
+        sched_obj = _zbv(p, spec.m) if schedule == "zb-v" else zb_h2(p, spec.m)
+        plan = compile_plan(sched_obj)
+        T = plan.n_ticks
+        n_chan = len(plan.used_channels())
+        C = spec.n_chunks
+        # bottleneck stage = loss stage: m*(F+B+W) per chunk + m*sink passes
+        flops = C * m * (cF.flops + cB.flops + cW.flops) + m * (
+            cSink.flops + cSinkB.flops + cSinkW.flops
+        )
+        byts = C * m * (cF.bytes + cB.bytes + cW.bytes) + m * (
+            cSink.bytes + cSinkB.bytes + cSinkW.bytes
+        )
+        # gradient-accumulator HBM traffic (the executor's grad_acc += g is
+        # outside the costed passes): unfused = read g + read acc + write acc;
+        # the fused Pallas wgrad kernel (kernels/wgrad_accum.py) keeps the
+        # accumulate in the matmul epilogue: read acc + write acc only, and
+        # the separate g materialization disappears.
+        params_local = sum(
+            int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(stage_local[0])
+        )
+        acc_traffic = (3 if not wgrad_fused else 1) * params_local * 4
+        byts = byts + C * m * acc_traffic
+        # per-axis collective wire bytes: per-pass psums run over the TP
+        # links; channel permutes run over the pipe links.  Sequence-sharded
+        # channels divide pipe bytes by tp and add one (tp-1)/tp all-gather
+        # per consumed F/B input on the TP links.
+        tp_n = 16
+        coll_tp = C * m * (cF.coll + cB.coll + cW.coll) + m * (
+            cSink.coll + cSinkB.coll + cSinkW.coll
+        )
+        chan_bytes = n_chan * T * act_bytes
+        if shard_channels:
+            chan_bytes /= tp_n
+            coll_tp += 2 * C * m * act_bytes * (tp_n - 1) / tp_n
+        coll_pipe = chan_bytes
+        coll = coll_tp + coll_pipe
+        detail = {
+            "F": dataclasses.asdict(cF), "B": dataclasses.asdict(cB),
+            "W": dataclasses.asdict(cW), "sinkF": dataclasses.asdict(cSink),
+            "sinkB": dataclasses.asdict(cSinkB), "sinkW": dataclasses.asdict(cSinkW),
+            "ticks": T, "channels": n_chan,
+            "coll_tp": coll_tp, "coll_pipe": coll_pipe,
+            "acc_traffic": C * m * acc_traffic,
+            "b": spec.microbatch, "m": spec.m,
+        }
+    else:
+        from repro.models.serve import build_serve_program
+        from repro.core.infer_executor import compile_infer_plan
+
+        mode = "prefill" if cell.kind == "prefill" else "decode"
+        program, cache_init, cache_pspecs = build_serve_program(
+            cfg, spec, placement, mode
+        )
+        cache_sh = jax.eval_shape(lambda: cache_init(b, cell.seq_len))
+        kind_specs = cache_pspecs("model")
+        cache_specs = jax.tree_util.tree_map(
+            lambda sd, ks: ks,
+            cache_sh,
+            kind_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        x_sh = (
+            act
+            if mode == "prefill"
+            else jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.jdtype())
+        )
+        if mode == "decode":
+            side_mb = {
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "positions": jax.ShapeDtypeStruct((1,), jnp.int32),
+            }
+            side_specs = jax.tree_util.tree_map(lambda _: P(), side_mb)
+        pos = cell.seq_len - 1 if mode == "decode" else 0
+        cPass = _cost_of(
+            lambda pr, x, sd, cc: program.chunk_fns[0](pr, x, sd, cc, pos),
+            mesh,
+            (stage_specs[0], P(), side_specs, cache_specs),
+            (P(), cache_specs),
+            (stage_sdt[0], x_sh, side_mb, cache_sh),
+        )
+        cSink = _cost_of(
+            lambda sh, y, sd: program.sink(sh, y, sd),
+            mesh, (shared_specs, P(), side_specs), P(),
+            (shared_sdt, x_sh, side_mb),
+        )
+        plan = compile_infer_plan(placement, spec.m)
+        T = plan.n_ticks
+        tok_bytes = (
+            act_bytes
+            if mode == "prefill"
+            else int(b * cfg.d_model) * act.dtype.itemsize
+        )
+        flops = spec.n_chunks * m * cPass.flops + m * cSink.flops
+        byts = spec.n_chunks * m * cPass.bytes + m * cSink.bytes
+        tp_n = 16
+        coll_tp = spec.n_chunks * m * cPass.coll + m * cSink.coll
+        chan_bytes = 2 * T * tok_bytes
+        if shard_channels and mode == "prefill":
+            chan_bytes /= tp_n
+            coll_tp += 2 * spec.n_chunks * m * act_bytes * (tp_n - 1) / tp_n
+        coll_pipe = chan_bytes
+        coll = coll_tp + coll_pipe
+        detail = {
+            "pass": dataclasses.asdict(cPass),
+            "sink": dataclasses.asdict(cSink),
+            "ticks": T,
+            "coll_tp": coll_tp, "coll_pipe": coll_pipe,
+            "b": spec.microbatch, "m": spec.m,
+        }
+
+    chips = 256
+    t_compute = flops / PEAK_FLOPS  # per-device flops already
+    t_memory = byts / HBM_BW
+    # pipe and tp traffic ride different physical links: bound = max
+    t_coll = max(coll_tp, coll_pipe) / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+
+    n_active = active_params(cfg)
+    tokens = cell.global_batch * cell.seq_len if cell.kind != "decode" else cell.global_batch
+    model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+    hlo_total = flops * chips  # per-device x chips (uniform by stage approx)
+    result = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "kind": cell.kind,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "coll_bytes_per_device": coll,
+        "coll_tp_bytes": coll_tp,
+        "coll_pipe_bytes": coll_pipe,
+        "opts": {
+            "b_override": b_override,
+            "shard_channels": shard_channels,
+            "wgrad_fused": wgrad_fused,
+            "schedule": schedule,
+        },
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": model_flops / hlo_total if hlo_total else None,
+        "detail": detail,
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items() if k != "detail"}))
+        sys.stdout.flush()
+    return result
+
+
+def active_params(cfg) -> float:
+    """Analytic active-parameter count (MoE counts topk + shared experts)."""
+    h, L = cfg.d_model, cfg.n_layers
+    ex = cfg.extras_dict()
+    dh = cfg.head_dim or h // cfg.n_heads
+    total = 0.0
+    for i in range(L):
+        kinds = cfg.block_pattern[i % cfg.period]
+        for kind in kinds:
+            if kind in ("attn", "attn_local"):
+                total += h * dh * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * dh * h
+            elif kind == "mla":
+                dq = ex.get("q_lora_rank", 1536)
+                dkv = ex.get("kv_lora_rank", 512)
+                dr = ex.get("qk_rope_head_dim", 64)
+                total += (
+                    h * dq + dq * cfg.n_heads * (dh + dr) + h * (dkv + dr)
+                    + 2 * dkv * cfg.n_heads * dh + cfg.n_heads * dh * h
+                )
+            elif kind == "mlp":
+                total += 3 * h * cfg.d_ff
+            elif kind == "moe":
+                f = ex["moe_d_ff"]
+                act_e = ex["topk"] + ex.get("n_shared_experts", 0)
+                total += act_e * 3 * h * f + h * ex["n_experts"]
+            elif kind in ("slstm", "mlstm"):
+                total += 5 * h * h
+            elif kind == "rglru":
+                dr = ex.get("lru_width", h)
+                total += 2 * h * dr + 2 * dr * dr + dr * h
+            elif kind == "encdec":
+                total += 3 * (h * dh * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * dh * h) / 1.5 + 2 * 3 * h * cfg.d_ff
+    total += 2 * cfg.vocab * h  # embed + head
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    results = []
+    for arch in archs:
+        for sid, cell, skip in cells_for(arch):
+            if args.shape != "all" and sid != args.shape:
+                continue
+            if skip:
+                results.append({"arch": arch, "shape": sid, "skipped": skip})
+                continue
+            try:
+                results.append(analyze_cell(arch, sid))
+            except Exception as e:
+                import traceback
+
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": sid, "error": str(e)[:300]})
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    bad = [r for r in results if "error" in r]
+    print(f"{len(results)-len(bad)}/{len(results)} roofline cells OK")
+
+
+if __name__ == "__main__":
+    main()

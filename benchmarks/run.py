@@ -1,0 +1,284 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the wall
+time of one evaluation of the underlying machinery on this host;
+``derived`` carries the reproduced quantity (bubble rate, ratio, ...) and the
+paper's reference value where one exists.
+
+Tables covered: 2 (closed forms), 4 (throughput ratios), 5 (bubble rates),
+8 (ZB-V rates), 10 (post-validation ablation), 12 (m <= p), Figs. 7/9
+(memory-limit sweeps).  Roofline terms come from benchmarks/roofline.py
+(separate entrypoint; results in results/roofline.json).
+"""
+
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.schedules import (
+    gpipe,
+    interleaved_1f1b,
+    one_f_one_b,
+    search,
+    zb_h1,
+    zb_h2,
+    zb_v,
+)
+from repro.core.simulator import TimeModel, simulate
+
+ROWS = []
+
+
+def emit(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# paper Table 9 profiled times; Table 5 reference bubble rates
+T9 = {
+    ("1.5B", 24): (8, 18.522, 18.086, 9.337, 0.601),
+    ("1.5B", 32): (8, 18.513, 18.086, 9.331, 0.626),
+    ("1.5B", 64): (8, 18.546, 18.097, 9.321, 0.762),
+    ("6.2B", 24): (8, 29.718, 29.444, 19.927, 0.527),
+    ("6.2B", 32): (8, 29.802, 29.428, 19.530, 0.577),
+    ("6.2B", 64): (8, 29.935, 29.621, 19.388, 0.535),
+    ("14.6B", 48): (16, 11.347, 11.248, 8.132, 0.377),
+    ("14.6B", 64): (16, 11.307, 11.254, 8.101, 0.379),
+    ("14.6B", 128): (16, 11.325, 11.308, 8.109, 0.378),
+    ("28.3B", 96): (32, 10.419, 10.207, 7.715, 0.408),
+    ("28.3B", 128): (32, 10.408, 10.204, 7.703, 0.408),
+    ("28.3B", 256): (32, 10.402, 10.248, 7.698, 0.460),
+}
+T5_REF = {  # (1f1b, zb-1p, zb-2p) per (model, m)
+    ("1.5B", 24): (0.2431, 0.1585, 0.0433),
+    ("1.5B", 32): (0.1985, 0.1242, 0.0039),
+    ("1.5B", 64): (0.1240, 0.0674, 0.0026),
+    ("6.2B", 24): (0.2347, 0.1323, 0.0029),
+    ("6.2B", 32): (0.1898, 0.1045, 0.0022),
+    ("6.2B", 64): (0.1091, 0.0554, 0.0010),
+    ("14.6B", 48): (0.2552, 0.1397, 0.0066),
+    ("14.6B", 64): (0.2082, 0.1088, 0.0054),
+    ("14.6B", 128): (0.1251, 0.0576, 0.0028),
+    ("28.3B", 96): (0.2646, 0.1421, 0.0038),
+    ("28.3B", 128): (0.2168, 0.1106, 0.0029),
+    ("28.3B", 256): (0.1352, 0.0594, 0.0018),
+}
+T4_THROUGHPUT = {  # paper samples/GPU/s: (1f1b, zb-2p)
+    ("1.5B", 24): (11.8, 14.5),
+    ("6.2B", 24): (3.50, 4.32),
+    ("14.6B", 48): (1.40, 1.81),
+    ("28.3B", 96): (0.76, 0.99),
+}
+
+
+def table2_closed_forms():
+    p, m = 8, 24
+    tm = TimeModel(1.0, 1.0, 1.0, 0.0)
+    tmg = TimeModel(1.0, 1.0, 1.0, 0.0, grouped_w=True)
+    r, us = timed(lambda: simulate(one_f_one_b(p, m), tmg).bubble_size)
+    emit("table2/1f1b_bubble", us, f"{r:.2f} (formula {(p-1)*3.0})")
+    r, us = timed(lambda: simulate(zb_h1(p, m), tm).bubble_size)
+    emit("table2/zb-h1_bubble", us, f"{r:.2f} (formula {(p-1)*1.0})")
+    r, us = timed(lambda: simulate(zb_h2(p, m), tm).bubble_size)
+    emit("table2/zb-h2_bubble", us, f"{r:.2f} (formula 0.0)")
+    mp = zb_h2(p, m).memory_profile(1.0, 0.5).max_peak
+    emit("table2/zb-h2_peakmem", 0.0, f"{mp:.1f} (formula {2*p-1})")
+
+
+def table5_bubble_rates():
+    for (model, m), (p, tf, tb, tw, tc) in T9.items():
+        tm = TimeModel(tf, tb, tw, tc)
+        tmg = TimeModel(tf, tb, tw, tc, grouped_w=True)
+        ref = T5_REF[(model, m)]
+        r, us = timed(lambda: simulate(one_f_one_b(p, m), tmg).bubble_rate)
+        emit(f"table5/{model}/m{m}/1f1b", us, f"{r:.4f} (paper {ref[0]:.4f})")
+        r, us = timed(lambda: search(p, m, tm, m_limit=float(p)).bubble_rate)
+        emit(f"table5/{model}/m{m}/zb-1p", us, f"{r:.4f} (paper {ref[1]:.4f})")
+        r, us = timed(lambda: search(p, m, tm, m_limit=2.0 * p).bubble_rate)
+        emit(f"table5/{model}/m{m}/zb-2p", us, f"{r:.4f} (paper {ref[2]:.4f})")
+
+
+def table4_throughput_ratios():
+    """Predicted ZB-2p/1F1B speedup from schedule costs vs paper's measured."""
+    for (model, m), (tput_1f1b, tput_zb) in T4_THROUGHPUT.items():
+        p, tf, tb, tw, tc = T9[(model, m)]
+        tm = TimeModel(tf, tb, tw, tc)
+        tmg = TimeModel(tf, tb, tw, tc, grouped_w=True)
+
+        def ratio():
+            c1 = simulate(one_f_one_b(p, m), tmg).cost
+            c2 = search(p, m, tm, m_limit=2.0 * p).cost
+            return c1 / c2
+
+        r, us = timed(ratio)
+        paper = tput_zb / tput_1f1b
+        emit(
+            f"table4/{model}/m{m}/speedup_zb2p_vs_1f1b",
+            us,
+            f"{r:.3f} (paper measured {paper:.3f})",
+        )
+
+
+def table8_zbv_rates():
+    # Table 8 ref values (6.2B p=16 block); profiled-time inputs for these
+    # runs are not published -- 6.2B p=8 times stand in (EXPERIMENTS.md).
+    refs = {(16, 48): 0.0697, (16, 64): 0.0533, (16, 128): 0.0274}
+    tm = TimeModel(29.718, 29.444, 19.927, 0.527)
+    for (p, m), ref in refs.items():
+        r, us = timed(lambda: simulate(zb_v(p, m, tm), tm).bubble_rate)
+        emit(
+            f"table8/zb-v/p{p}/m{m}",
+            us,
+            f"{r:.4f} (paper {ref:.4f}, substitute times)",
+        )
+
+
+def fig7_memory_sweep():
+    p, m = 8, 32
+    tf, tb, tw, tc = 18.513, 18.086, 9.331, 0.626
+    tm = TimeModel(tf, tb, tw, tc)
+    pts = []
+    for lim in [p, 1.25 * p, 1.5 * p, 1.75 * p, 2 * p, 2.5 * p, 3 * p]:
+        r = search(p, m, tm, m_limit=float(lim)).bubble_rate
+        pts.append((round(lim / p, 2), round(r, 4)))
+    emit("fig7/memory_sweep_1.5B_m32", 0.0, json.dumps(pts).replace(",", ";"))
+    assert pts[0][1] > pts[-1][1]
+    assert abs(pts[4][1] - pts[-1][1]) < 0.02, "should plateau by 2p"
+
+
+def fig9_zbv_memory_sweep():
+    p, m = 16, 48
+    tm = TimeModel(29.718, 29.444, 19.927, 0.527)
+    pts = []
+    for lim in [p, 1.5 * p, 2 * p]:
+        r = simulate(zb_v(p, m, tm, m_limit=float(lim)), tm).bubble_rate
+        pts.append((round(lim / p, 2), round(r, 4)))
+    emit("fig9/zbv_memory_sweep", 0.0, json.dumps(pts).replace(",", ";"))
+
+
+def table10_postval_ablation():
+    """Structural ablation: a blocking all-reduce at the optimizer boundary
+    stalls every stage until the slowest stage's last W; post-validation
+    replaces it with a pipelined relay that overlaps the W tail."""
+    p, m = 8, 24
+    tf, tb, tw, tc = 18.522, 18.086, 9.337, 0.601
+    tm = TimeModel(tf, tb, tw, tc)
+    res = search(p, m, tm, m_limit=2.0 * p)
+    sim = simulate(res.schedule, tm)
+    last_end = max(sim.end.values())
+    per_stage_end = [
+        max(sim.end[(s, op)] for op in res.schedule.stage_ops[s])
+        for s in range(p)
+    ]
+    stall = sum(last_end - e for e in per_stage_end) / p + 2 * math.log2(p) * tc
+    emit(
+        "table10/postval_vs_allreduce",
+        0.0,
+        f"avg stall removed {stall:.1f} = {100*stall/sim.cost:.1f}% of iter (paper ~8%)",
+    )
+
+
+def table12_small_m():
+    tm = TimeModel(1.0, 1.0, 0.9, 0.0)
+    tmg = TimeModel(1.0, 1.0, 0.9, 0.0, grouped_w=True)
+    for p, m in [(8, 2), (8, 4), (8, 8)]:
+        c1 = simulate(one_f_one_b(p, m), tmg).cost
+        c2 = search(p, m, tm, m_limit=2.0 * p).cost
+        emit(
+            f"table12/p{p}/m{m}/speedup",
+            0.0,
+            f"{c1/c2:.3f} (paper reports 1.2-1.3x for m<=p)",
+        )
+
+
+def scheduler_microbench():
+    p, m = 32, 256
+    tm = TimeModel(10.4, 10.2, 7.7, 0.41)
+    _, us = timed(lambda: zb_h2(p, m))
+    emit("micro/zb_h2_construct_p32_m256", us, "handcrafted")
+    _, us = timed(lambda: simulate(zb_h2(p, m), tm))
+    emit("micro/simulate_p32_m256", us, f"{3*p*m} ops")
+
+
+def executor_tick_microbench():
+    """us per executor tick on this host (CPU; structural figure only)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.configs import get_reduced
+    from repro.core.executor import PipelineExecutor
+    from repro.core.schedules import compile_plan
+    from repro.models.lm import RunSpec, build_program, init_params, side_inputs
+
+    cfg = get_reduced("gpt3_1_5b")
+    p, m = 1, 4
+    sched = zb_h2(p, m)
+    plan = compile_plan(sched)
+    spec = RunSpec(p=p, n_chunks=1, microbatch=2, seq_len=32, m=m)
+    program = build_program(cfg, spec, sched.placement)
+    stacked, shared = init_params(cfg, spec, sched.placement)
+    side = side_inputs(cfg, spec)
+    execu = PipelineExecutor(program, plan, pipe_axis="pipe")
+    grad_fn = execu.build_grad_fn()
+    mesh = jax.make_mesh((p,), ("pipe",))
+
+    def body(st, sh, sd):
+        local = tuple(jax.tree_util.tree_map(lambda a: a[0], x) for x in st)
+        return grad_fn(local, sh, sd)[2]
+
+    fn = jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                tuple(
+                    jax.tree_util.tree_map(lambda _: P("pipe"), x) for x in stacked
+                ),
+                P(),
+                P(),
+            ),
+            out_specs=P(),
+            check_rep=False,
+        )
+    )
+    fn(stacked, shared, side).block_until_ready()
+    t0 = time.perf_counter()
+    n = 5
+    for _ in range(n):
+        fn(stacked, shared, side).block_until_ready()
+    us = (time.perf_counter() - t0) / n / plan.n_ticks * 1e6
+    emit("micro/executor_us_per_tick_cpu", us, f"{plan.n_ticks} ticks/step")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table2_closed_forms()
+    table5_bubble_rates()
+    table4_throughput_ratios()
+    table8_zbv_rates()
+    fig7_memory_sweep()
+    fig9_zbv_memory_sweep()
+    table10_postval_ablation()
+    table12_small_m()
+    scheduler_microbench()
+    executor_tick_microbench()
+    print(f"# {len(ROWS)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Sharded checkpointing with elastic re-shard on restore.
+
+Layout: <dir>/step_<n>/
+  manifest.json       -- step, mesh shape, p, n_chunks, leaf index
+  chunk<k>.npz        -- per-chunk stage-stacked params (host-gathered)
+  shared.npz, opt_*.npz, meta.json
+
+Arrays are saved at *global* (stage-stacked, TP-unsharded... i.e. as the jit
+outputs them) shapes, so a restore onto a different mesh / pipeline width is a
+pure re-plan: ``reshard_stages`` regroups layer blocks when p changes
+(elastic scaling; the ZB auto-scheduler re-searches the schedule for the new
+p -- DESIGN.md Sec. 4).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save", "restore", "latest_step", "reshard_stages"]
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(proto: PyTree, data: Dict[str, np.ndarray]) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(proto)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = data[key]
+        leaves.append(np.asarray(arr).astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(directory: str, step: int, state: Dict[str, PyTree], meta: Optional[dict] = None):
+    """Atomic checkpoint write (tmp dir + rename)."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    index = {}
+    for name, tree in state.items():
+        data = _flatten(tree)
+        np.savez(os.path.join(tmp, f"{name}.npz"), **data)
+        index[name] = sorted(data.keys())
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "index": index, "meta": meta or {}}, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, proto: Dict[str, PyTree]) -> Tuple[Dict[str, PyTree], dict]:
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    state = {}
+    for name, tree in proto.items():
+        with np.load(os.path.join(path, f"{name}.npz")) as z:
+            state[name] = _unflatten_like(tree, dict(z))
+    return state, manifest
+
+
+def reshard_stages(stacked_old, p_old: int, p_new: int):
+    """Elastic re-shard: regroup stage-stacked block params for a new p.
+
+    Works when blocks-per-stage changes by an integer factor (the common
+    elastic moves p -> p/2 or p -> 2p).  Block leaves have shape
+    (p_old, g_old, ...); masks are recomputed by the caller via init_params.
+    """
+    if p_old == p_new:
+        return stacked_old
+
+    def regroup(leaf):
+        if leaf.ndim < 2 or leaf.shape[0] != p_old:
+            return leaf
+        g_old = leaf.shape[1]
+        total = p_old * g_old
+        if total % p_new:
+            raise ValueError(f"cannot reshard {leaf.shape} to p={p_new}")
+        g_new = total // p_new
+        return np.asarray(leaf).reshape((p_new, g_new) + leaf.shape[2:])
+
+    return jax.tree_util.tree_map(regroup, stacked_old)

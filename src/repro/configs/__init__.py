@@ -1,0 +1,40 @@
+"""Architecture registry: 10 assigned architectures + the paper's models.
+
+Each module exposes ``CONFIG`` (the exact published configuration) and
+``reduced()`` (a tiny same-family config for CPU smoke tests).  Input-shape
+cells for the dry run are defined in ``shapes.py``.
+"""
+
+from importlib import import_module
+from typing import Dict
+
+from ..models.lm import ArchConfig
+
+ARCH_IDS = [
+    "whisper_tiny",
+    "deepseek_v3_671b",
+    "qwen2_moe_a2_7b",
+    "deepseek_67b",
+    "minitron_8b",
+    "gemma2_2b",
+    "internlm2_1_8b",
+    "llava_next_mistral_7b",
+    "xlstm_350m",
+    "recurrentgemma_9b",
+]
+
+PAPER_IDS = ["gpt3_1_5b", "gpt3_6_2b", "gpt3_14_6b", "gpt3_28_3b"]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = import_module(f".{arch_id}", __package__)
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    mod = import_module(f".{arch_id}", __package__)
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS + PAPER_IDS}

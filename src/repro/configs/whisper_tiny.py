@@ -1,0 +1,30 @@
+"""whisper-tiny: 4L enc + 4L dec, d=384, 6H, d_ff=1536, vocab 51865.
+
+Encoder-decoder with conv audio frontend STUB (input_specs provides
+precomputed frame embeddings at d_model). [arXiv:2212.04356; unverified]
+Pipeline layout: concat-carry (enc_seq + dec_seq), uniform enc+dec joint
+blocks with per-stage role masks (DESIGN.md Sec. 5).
+"""
+import dataclasses
+from repro.models.lm import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,  # joint enc+dec blocks (4 enc || 4 dec, concat-carry)
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    block_pattern=(("encdec",),),
+    extras=(("s_enc", 1500), ("frontend_dim", 384)),
+    dtype="bfloat16",
+    source="arXiv:2212.04356",
+)
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+        vocab=128, extras=(("s_enc", 8), ("frontend_dim", 32)), dtype="float32",
+    )

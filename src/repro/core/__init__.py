@@ -1,0 +1,4 @@
+from . import passes, simulator
+from .executor import PipelineExecutor, PipelineProgram
+
+__all__ = ["passes", "simulator", "PipelineExecutor", "PipelineProgram"]

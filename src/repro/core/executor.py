@@ -1,0 +1,513 @@
+"""SPMD ticked pipeline executor (shard_map over the pipe axis).
+
+Runs any :class:`ExecutionPlan` -- 1F1B, ZB-H1/H2, ZB-V, interleaved,
+auto-searched -- as one SPMD program:
+
+  * time is quantized into *ticks*; at tick t every stage looks up its op in
+    the static ``(p, T)`` tables compiled from the schedule and
+    ``lax.switch``es into the F / B / W / idle branch for the op's chunk;
+  * activations and activation-gradients cross stages through four
+    collective-permute channels (F-up, F-down, B-down, B-up), closed once per
+    tick *outside* the switch (pipe-axis collectives must be unconditional
+    under SPMD); channels a schedule never uses are pruned at trace time;
+  * per-stage state lives in slot-addressed buffers whose sizes come from the
+    plan's interval analysis: activation/gradient inboxes, residuals (F->B),
+    weight-grad contexts (B->W; the paper's "kept nabla_z" memory), and the
+    head+loss residuals at the loss position.
+
+SPMD invariant: collectives over the *tensor-parallel* axis may appear inside
+switch branches (all ranks of a TP group share the stage index and therefore
+the branch); collectives over the *pipe* axis must stay outside.  See
+DESIGN.md Sec. 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .passes import FBWModule
+from .schedules.ir import (
+    CHANNEL_BWD_DOWN,
+    CHANNEL_BWD_UP,
+    CHANNEL_FWD_DOWN,
+    CHANNEL_FWD_UP,
+    ExecutionPlan,
+    N_CHANNELS,
+    OpKind,
+)
+
+PyTree = Any
+
+__all__ = ["PipelineProgram", "PipelineExecutor", "microbatch_split"]
+
+_CHANNEL_SHIFT = {
+    CHANNEL_FWD_UP: +1,
+    CHANNEL_FWD_DOWN: -1,
+    CHANNEL_BWD_DOWN: -1,
+    CHANNEL_BWD_UP: +1,
+}
+
+
+@dataclasses.dataclass
+class PipelineProgram:
+    """What the model hands the executor.
+
+    ``chunks[c]`` is the FBW module computing chunk ``c``'s layer group on one
+    stage (structurally identical across stages; parameters differ).  ``src``
+    produces the chunk-0 input from the per-microbatch side inputs (embedding
+    or modality-frontend stub); ``sink`` maps the last chunk's output + side
+    inputs to the scalar loss (final norm + LM head + CE).  Shared parameters
+    (embedding table, head) are replicated along the pipe axis and their
+    gradients psum'd over it.
+    """
+
+    chunks: Sequence[FBWModule]
+    src_fwd: Callable[[PyTree, PyTree], jax.Array]  # (shared, side_mb) -> x
+    src_bwd_w: Callable[[PyTree, PyTree, jax.Array], PyTree]  # -> shared grads
+    sink: FBWModule  # fwd(shared, y, side_mb) -> loss; auto_fbw-split
+    act_shape: Tuple[int, ...]  # (b_mb, s, h) carried between stages
+    act_dtype: Any = jnp.float32
+
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+
+def microbatch_split(batch: PyTree, m: int) -> PyTree:
+    """(G, ...) -> (m, G/m, ...) microbatch axis up front."""
+    def split(x):
+        g = x.shape[0]
+        assert g % m == 0, f"batch {g} not divisible by m={m}"
+        return x.reshape((m, g // m) + x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def _dyn_get(buf: jax.Array, idx: jax.Array) -> jax.Array:
+    """buf[(idx, ...)] with a traced index."""
+    return jax.lax.dynamic_index_in_dim(buf, idx, 0, keepdims=False)
+
+
+def _dyn_set(buf: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_index_in_dim(buf, val, idx, 0)
+
+
+def _masked_set(buf, idx, val, active):
+    """In-place slot write that keeps the old value when inactive."""
+    old = _dyn_get(buf, idx)
+    act = jnp.asarray(active)
+    sel = jnp.where(
+        act.reshape((1,) * val.ndim) if val.ndim else act, val, old
+    ).astype(buf.dtype)
+    return _dyn_set(buf, idx, sel)
+
+
+def _tree_dyn_get(bufs: PyTree, idx) -> PyTree:
+    return jax.tree_util.tree_map(lambda b: _dyn_get(b, idx), bufs)
+
+
+def _tree_dyn_set(bufs: PyTree, idx, vals: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda b, v: _dyn_set(b, idx, v.astype(b.dtype)), bufs, vals)
+
+
+def _zeros_buffer(shape_dtype: jax.ShapeDtypeStruct, slots: int) -> jax.Array:
+    return jnp.zeros((slots,) + tuple(shape_dtype.shape), shape_dtype.dtype)
+
+
+class PipelineExecutor:
+    """Compiles (program, plan) into a pipelined grads-and-loss function.
+
+    The returned ``grad_fn(stage_params, shared, batch_side) -> (grads,
+    shared_grads, loss)`` is pure and shard_map-compatible: it must run inside
+    a shard_map whose ``axis_name == pipe_axis``; ``stage_params`` are this
+    stage's (already-local) parameters.
+    """
+
+    def __init__(
+        self,
+        program: PipelineProgram,
+        plan: ExecutionPlan,
+        pipe_axis: str = "data",
+        unroll: bool = False,
+        prune_channels: bool = True,
+        tp_axis: Optional[str] = None,
+        shard_channels: bool = False,
+    ):
+        if program.n_chunks() != plan.n_chunks:
+            raise ValueError(
+                f"program has {program.n_chunks()} chunks, plan {plan.n_chunks}"
+            )
+        self.program = program
+        self.plan = plan
+        self.pipe_axis = pipe_axis
+        self.unroll = unroll
+        self.channels = (
+            plan.used_channels() if prune_channels else tuple(range(N_CHANNELS))
+        )
+        # Sequence-sharded channels (beyond-paper, EXPERIMENTS.md Perf):
+        # every TP rank otherwise permutes a redundant full activation copy
+        # over the (slow) pipe links; instead each rank sends its 1/tp seq
+        # slice and the consumer all-gathers over the (fast) TP links.
+        self.tp_axis = tp_axis
+        self.shard_channels = bool(shard_channels and tp_axis is not None)
+
+    # ------------------------------------------------------------------ #
+    def _abstract_state(self, stage_params, shared, side_all):
+        """Shape-evaluate chunk/sink residual structures to size the buffers."""
+        prog, plan = self.program, self.plan
+        side_mb = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), side_all
+        )
+        act = jax.ShapeDtypeStruct(prog.act_shape, prog.act_dtype)
+
+        res_shapes, wctx_shapes = [], []
+        y_shape = act
+        for c, mod in enumerate(prog.chunks):
+            fwd_out = jax.eval_shape(
+                lambda p, x, sd: mod.fwd(p, x, sd), stage_params[c], act, side_mb
+            )
+            y_shape, res_shape = fwd_out
+            res_shapes.append(res_shape)
+            dy = act
+            bwd_out = jax.eval_shape(
+                lambda p, r, g, sd: mod.bwd_x(p, r, g, sd),
+                stage_params[c],
+                res_shape,
+                dy,
+                side_mb,
+            )
+            _, wctx_shape = bwd_out
+            wctx_shapes.append(wctx_shape)
+
+        sink_out = jax.eval_shape(
+            lambda sh, y, sd: prog.sink.fwd(sh, y, sd), shared, act, side_mb
+        )
+        loss_shape, sink_res_shape = sink_out
+        return res_shapes, wctx_shapes, sink_res_shape, loss_shape
+
+    # ------------------------------------------------------------------ #
+    def build_grad_fn(self):
+        prog, plan = self.program, self.plan
+        C = plan.n_chunks
+        act_sd = jax.ShapeDtypeStruct(prog.act_shape, prog.act_dtype)
+
+        def grad_fn(stage_params, shared, side_all):
+            # -- static residual structures -------------------------------- #
+            res_sh, wctx_sh, sink_sh, loss_sh = self._abstract_state(
+                stage_params, shared, side_all
+            )
+
+            # -- local tick tables ----------------------------------------- #
+            sidx = jax.lax.axis_index(self.pipe_axis)
+
+            def row(tab):
+                return jnp.asarray(tab)[sidx]
+
+            xs = dict(
+                kind=row(plan.op_kind),
+                chunk=row(plan.op_chunk),
+                mb=row(plan.op_mb),
+                in_slot=row(plan.op_in_slot),
+                res_slot=row(plan.op_res_slot),
+                wctx_slot=row(plan.op_wctx_slot),
+                sink_slot=row(plan.op_sink_slot),
+                is_src=row(plan.op_is_src),
+                is_loss=row(plan.op_is_loss),
+                is_last_b=row(plan.op_is_last_b),
+                send_channel=row(plan.send_channel),
+                send_local=row(plan.send_local),
+                local_chunk=row(plan.local_chunk),
+                local_slot=row(plan.local_slot),
+                local_is_grad=row(plan.local_is_grad),
+                recv_valid=row(plan.recv_valid),
+                recv_chunk=row(plan.recv_chunk),
+                recv_slot=row(plan.recv_slot),
+            )
+
+            # -- buffers ----------------------------------------------------- #
+            S_act = max(plan.n_act_slots)
+            S_grad = max(plan.n_grad_slots)
+            if self.shard_channels:
+                tp_size = jax.lax.axis_size(self.tp_axis)
+                assert prog.act_shape[1] % tp_size == 0, (
+                    f"seq {prog.act_shape[1]} must divide tp={tp_size} for"
+                    " sequence-sharded channels"
+                )
+                chan_shape = (
+                    prog.act_shape[0],
+                    prog.act_shape[1] // tp_size,
+                ) + prog.act_shape[2:]
+            else:
+                chan_shape = prog.act_shape
+            act_in = jnp.zeros((C, S_act) + chan_shape, prog.act_dtype)
+            grad_in = jnp.zeros((C, S_grad) + chan_shape, prog.act_dtype)
+
+            def to_chan(full):
+                """Slice this rank's seq shard for the channel payload."""
+                if not self.shard_channels:
+                    return full
+                r = jax.lax.axis_index(self.tp_axis)
+                k = chan_shape[1]
+                return jax.lax.dynamic_slice_in_dim(full, r * k, k, axis=1)
+
+            def from_chan(slice_):
+                """Reassemble the full activation from seq shards."""
+                if not self.shard_channels:
+                    return slice_
+                return jax.lax.all_gather(
+                    slice_, self.tp_axis, axis=1, tiled=True
+                )
+            res_buf = [
+                jax.tree_util.tree_map(
+                    lambda sd: _zeros_buffer(sd, plan.n_res_slots[c]), res_sh[c]
+                )
+                for c in range(C)
+            ]
+            wctx_buf = [
+                jax.tree_util.tree_map(
+                    lambda sd: _zeros_buffer(sd, plan.n_wctx_slots[c]), wctx_sh[c]
+                )
+                for c in range(C)
+            ]
+            sink_buf = jax.tree_util.tree_map(
+                lambda sd: _zeros_buffer(sd, plan.n_sink_slots), sink_sh
+            )
+            acc_dt = lambda leaf: jnp.promote_types(leaf.dtype, jnp.float32)
+            grad_acc = jax.tree_util.tree_map(
+                lambda pleaf: jnp.zeros(pleaf.shape, acc_dt(pleaf)), stage_params
+            )
+            shared_acc = jax.tree_util.tree_map(
+                lambda pleaf: jnp.zeros(pleaf.shape, acc_dt(pleaf)), shared
+            )
+            loss_acc = jnp.zeros((), jnp.promote_types(loss_sh.dtype, jnp.float32))
+
+            state0 = dict(
+                act_in=act_in,
+                grad_in=grad_in,
+                res=res_buf,
+                wctx=wctx_buf,
+                sink=sink_buf,
+                grad_acc=grad_acc,
+                shared_acc=shared_acc,
+                loss=loss_acc,
+            )
+
+            zero_act = jnp.zeros(prog.act_shape, prog.act_dtype)
+
+            # -- branch bodies ---------------------------------------------- #
+            def side_at(mb):
+                return jax.tree_util.tree_map(
+                    lambda a: _dyn_get(a, mb), side_all
+                )
+
+            def f_branch(c):
+                def body(state, t):
+                    side_mb = side_at(t["mb"])
+                    x_inbox = from_chan(_dyn_get(state["act_in"][c], t["in_slot"]))
+
+                    def from_src(_):
+                        return prog.src_fwd(shared, side_mb).astype(prog.act_dtype)
+
+                    x = jax.lax.cond(
+                        t["is_src"], from_src, lambda _: x_inbox, None
+                    )
+                    y, res = prog.chunks[c].fwd(stage_params[c], x, side_mb)
+                    state = dict(state)
+                    res_list = list(state["res"])
+                    res_list[c] = _tree_dyn_set(res_list[c], t["res_slot"], res)
+                    state["res"] = res_list
+
+                    def with_loss(st):
+                        loss, sres = prog.sink.fwd(shared, y, side_mb)
+                        st = dict(st)
+                        st["sink"] = jax.tree_util.tree_map(
+                            lambda b, v: _masked_set(b, t["sink_slot"], v, True),
+                            st["sink"],
+                            sres,
+                        )
+                        st["loss"] = st["loss"] + loss.astype(st["loss"].dtype)
+                        return st
+
+                    state = jax.lax.cond(
+                        t["is_loss"], with_loss, lambda st: st, state
+                    )
+                    return state, y.astype(prog.act_dtype)
+
+                return body
+
+            def b_branch(c):
+                def body(state, t):
+                    side_mb = side_at(t["mb"])
+                    res = _tree_dyn_get(state["res"][c], t["res_slot"])
+                    dy_inbox = from_chan(
+                        _dyn_get(state["grad_in"][c], t["in_slot"])
+                    )
+                    state = dict(state)
+
+                    if c == C - 1:
+                        def from_sink(_):
+                            sres = _tree_dyn_get(state["sink"], t["sink_slot"])
+                            ones = jnp.ones(loss_sh.shape, loss_sh.dtype)
+                            dy_s, _sink_wctx = prog.sink.bwd_x(
+                                shared, sres, ones, side_mb
+                            )
+                            return dy_s.astype(prog.act_dtype)
+
+                        dy = jax.lax.cond(
+                            t["is_loss"], from_sink, lambda _: dy_inbox, None
+                        )
+                    else:
+                        dy = dy_inbox
+
+                    dx, wctx = prog.chunks[c].bwd_x(
+                        stage_params[c], res, dy, side_mb
+                    )
+                    wctx_list = list(state["wctx"])
+                    wctx_list[c] = _tree_dyn_set(
+                        wctx_list[c], t["wctx_slot"], wctx
+                    )
+                    state["wctx"] = wctx_list
+
+                    if c == 0:
+                        def embed_grads(st):
+                            g = prog.src_bwd_w(shared, side_mb, dx)
+                            st = dict(st)
+                            st["shared_acc"] = jax.tree_util.tree_map(
+                                lambda a, b: a + b.astype(a.dtype),
+                                st["shared_acc"],
+                                g,
+                            )
+                            return st
+
+                        state = jax.lax.cond(
+                            t["is_last_b"], embed_grads, lambda st: st, state
+                        )
+                    return state, dx.astype(prog.act_dtype)
+
+                return body
+
+            def w_branch(c):
+                def body(state, t):
+                    side_mb = side_at(t["mb"])
+                    res = _tree_dyn_get(state["res"][c], t["res_slot"])
+                    wctx = _tree_dyn_get(state["wctx"][c], t["wctx_slot"])
+                    g = prog.chunks[c].bwd_w(stage_params[c], res, wctx, side_mb)
+                    state = dict(state)
+                    acc = list(state["grad_acc"])
+                    acc[c] = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype), acc[c], g
+                    )
+                    state["grad_acc"] = type(state["grad_acc"])(acc)
+
+                    if c == C - 1:
+                        def sink_grads(st):
+                            sres = _tree_dyn_get(st["sink"], t["sink_slot"])
+                            ones = jnp.ones(loss_sh.shape, loss_sh.dtype)
+                            sg = prog.sink.bwd_w(shared, sres, ones, side_mb)
+                            st = dict(st)
+                            st["shared_acc"] = jax.tree_util.tree_map(
+                                lambda a, b: a + b.astype(a.dtype),
+                                st["shared_acc"],
+                                sg,
+                            )
+                            return st
+
+                        state = jax.lax.cond(
+                            t["is_loss"], sink_grads, lambda st: st, state
+                        )
+                    return state, zero_act
+
+                return body
+
+            def idle_branch(state, t):
+                return state, zero_act
+
+            branches = [idle_branch]
+            for c in range(C):
+                branches.append(f_branch(c))
+            for c in range(C):
+                branches.append(b_branch(c))
+            for c in range(C):
+                branches.append(w_branch(c))
+
+            def branch_index(kind, chunk):
+                # idle=0; F: 1+c; B: 1+C+c; W: 1+2C+c
+                base = jnp.where(
+                    kind == int(OpKind.F),
+                    1,
+                    jnp.where(kind == int(OpKind.B), 1 + C, 1 + 2 * C),
+                )
+                return jnp.where(kind == int(OpKind.IDLE), 0, base + chunk)
+
+            # -- one tick ----------------------------------------------------- #
+            def tick(state, t):
+                idx = branch_index(t["kind"], t["chunk"])
+                state, send_full = jax.lax.switch(idx, branches, state, t)
+                send_val = to_chan(send_full)
+                zero_chan = jnp.zeros(chan_shape, prog.act_dtype)
+
+                # local (same-stage) deposit: chunk turns in V placement
+                is_local_act = t["send_local"] & ~t["local_is_grad"]
+                is_local_grad = t["send_local"] & t["local_is_grad"]
+                flat_a = state["act_in"].reshape((-1,) + chan_shape)
+                flat_g = state["grad_in"].reshape((-1,) + chan_shape)
+                a_idx = t["local_chunk"] * S_act + t["local_slot"]
+                g_idx = t["local_chunk"] * S_grad + t["local_slot"]
+                flat_a = _masked_set(flat_a, a_idx, send_val, is_local_act)
+                flat_g = _masked_set(flat_g, g_idx, send_val, is_local_grad)
+
+                # channel sends: one collective-permute per live channel
+                for d in self.channels:
+                    payload = jnp.where(
+                        t["send_channel"] == d, send_val, zero_chan
+                    )
+                    shift = _CHANNEL_SHIFT[d]
+                    p = plan.p
+                    perm = [(i, (i + shift) % p) for i in range(p)]
+                    got = jax.lax.ppermute(payload, self.pipe_axis, perm)
+                    is_act_chan = d in (CHANNEL_FWD_UP, CHANNEL_FWD_DOWN)
+                    valid = t["recv_valid"][d]
+                    ridx = t["recv_chunk"][d] * (
+                        S_act if is_act_chan else S_grad
+                    ) + t["recv_slot"][d]
+                    if is_act_chan:
+                        flat_a = _masked_set(flat_a, ridx, got, valid)
+                    else:
+                        flat_g = _masked_set(flat_g, ridx, got, valid)
+
+                state = dict(state)
+                state["act_in"] = flat_a.reshape((C, S_act) + chan_shape)
+                state["grad_in"] = flat_g.reshape((C, S_grad) + chan_shape)
+                return state, None
+
+            # grad_acc over chunks must be a tuple for the _tree ops
+            state0["grad_acc"] = tuple(
+                jax.tree_util.tree_map(
+                    lambda pleaf: jnp.zeros(pleaf.shape, acc_dt(pleaf)), sp
+                )
+                for sp in stage_params
+            )
+
+            if self.unroll:
+                state = state0
+                for t_i in range(plan.n_ticks):
+                    t = jax.tree_util.tree_map(lambda a: a[t_i], xs)
+                    state, _ = tick(state, t)
+            else:
+                state, _ = jax.lax.scan(
+                    tick, state0, xs, length=plan.n_ticks
+                )
+
+            grads = state["grad_acc"]
+            shared_grads = jax.lax.psum(state["shared_acc"], self.pipe_axis)
+            loss = jax.lax.psum(state["loss"], self.pipe_axis)
+            return grads, shared_grads, loss
+
+        return grad_fn

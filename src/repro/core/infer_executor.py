@@ -1,0 +1,279 @@
+"""F-only pipelined serving executor (prefill + decode).
+
+Same ticked shard_map structure as the training executor, reduced to forward
+passes: m request groups stream through the stages (fill-drain), each stage
+threading its per-group caches.  Decode carries a (b, 1, h) token activation;
+prefill carries the full (b, s, h) sequence and emits the caches.
+
+The decode pipeline's bubble fraction is (pC-1)/(m+pC-1) -- pipeline
+parallelism wants many concurrent request groups; the long_500k (m=1) cell
+honestly shows PP is the wrong axis for single-stream decode (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schedules.ir import Placement
+
+PyTree = Any
+
+__all__ = ["InferProgram", "InferExecutor", "compile_infer_plan"]
+
+
+@dataclasses.dataclass
+class InferPlan:
+    p: int
+    m: int
+    n_chunks: int
+    n_ticks: int
+    valid: np.ndarray  # (p, T) bool: run an F this tick
+    chunk: np.ndarray  # (p, T)
+    mb: np.ndarray  # (p, T)
+    is_src: np.ndarray  # (p, T)
+    is_sink: np.ndarray  # (p, T)
+    send_up: np.ndarray  # (p, T) send output to stage+1
+    send_down: np.ndarray  # (p, T)
+    send_local: np.ndarray  # (p, T) deposit locally (chunk turn)
+    local_chunk: np.ndarray
+    recv_up: np.ndarray  # (p, T, 2): [valid, chunk] arriving from stage-1
+    recv_down: np.ndarray
+
+
+def compile_infer_plan(placement: Placement, m: int) -> InferPlan:
+    """Fill-drain forward pipeline via greedy list scheduling.
+
+    F(c, k, j) runs at the earliest tick after its producer F finished
+    (cross-stage arrivals land at tick+1) with its stage free; steady-state
+    cadence is C ticks per microbatch (each stage owns C chunk passes).
+    """
+    p, C = placement.p, placement.n_chunks
+    ticks = {}
+    stage_free = [0] * p
+    for j in range(m):
+        for c in range(C):
+            for k in range(p):
+                s = placement.stage_of(c, k)
+                prev = placement.fwd_prev(c, k)
+                ready = 0
+                if prev is not None:
+                    ps = placement.stage_of(*prev)
+                    ready = ticks[(prev[0], prev[1], j)] + 1
+                t = max(ready, stage_free[s])
+                ticks[(c, k, j)] = t
+                stage_free[s] = t + 1
+    T = max(ticks.values()) + 1
+    shape = (p, T)
+    valid = np.zeros(shape, bool)
+    chunk = np.zeros(shape, np.int32)
+    mb = np.zeros(shape, np.int32)
+    is_src = np.zeros(shape, bool)
+    is_sink = np.zeros(shape, bool)
+    send_up = np.zeros(shape, bool)
+    send_down = np.zeros(shape, bool)
+    send_local = np.zeros(shape, bool)
+    local_chunk = np.zeros(shape, np.int32)
+    recv_up = np.zeros((p, T, 2), np.int32)
+    recv_down = np.zeros((p, T, 2), np.int32)
+    for j in range(m):
+        for c in range(C):
+            for k in range(p):
+                s = placement.stage_of(c, k)
+                t = ticks[(c, k, j)]
+                assert not valid[s, t], "fill-drain collision"
+                valid[s, t] = True
+                chunk[s, t] = c
+                mb[s, t] = j
+                nxt = placement.fwd_next(c, k)
+                if placement.fwd_prev(c, k) is None:
+                    is_src[s, t] = True
+                if nxt is None:
+                    is_sink[s, t] = True
+                else:
+                    ns = placement.stage_of(*nxt)
+                    if ns == s:
+                        send_local[s, t] = True
+                        local_chunk[s, t] = nxt[0]
+                    elif ns == (s + 1) % p:
+                        send_up[s, t] = True
+                        recv_up[ns, t] = (1, nxt[0])
+                    elif ns == (s - 1) % p:
+                        send_down[s, t] = True
+                        recv_down[ns, t] = (1, nxt[0])
+                    else:
+                        raise ValueError("non-adjacent send")
+    return InferPlan(
+        p=p,
+        m=m,
+        n_chunks=C,
+        n_ticks=T,
+        valid=valid,
+        chunk=chunk,
+        mb=mb,
+        is_src=is_src,
+        is_sink=is_sink,
+        send_up=send_up,
+        send_down=send_down,
+        send_local=send_local,
+        local_chunk=local_chunk,
+        recv_up=recv_up,
+        recv_down=recv_down,
+    )
+
+
+@dataclasses.dataclass
+class InferProgram:
+    """chunk_fns[c](params_c, x, side_mb, cache_c_mb, pos) -> (y, cache);
+    src(shared, side_mb) -> x; sink(shared, y, side_mb) -> logits."""
+
+    chunk_fns: Sequence[Callable]
+    src: Callable
+    sink: Callable
+    act_shape: Tuple[int, ...]
+    act_dtype: Any
+    out_shape: Tuple[int, ...]
+    out_dtype: Any
+
+
+class InferExecutor:
+    def __init__(self, program: InferProgram, plan: InferPlan, pipe_axis: str):
+        self.program = program
+        self.plan = plan
+        self.pipe_axis = pipe_axis
+
+    def build_step_fn(self):
+        """(stage_params, shared, side_all, caches, pos) ->
+        (outputs (m, *out_shape), new caches).
+
+        ``caches``: per chunk, pytree with leading (m,) microbatch axis --
+        this stage's slice of each request group's cache.
+        """
+        prog, plan = self.program, self.plan
+        C = plan.n_chunks
+
+        def step_fn(stage_params, shared, side_all, caches, pos):
+            sidx = jax.lax.axis_index(self.pipe_axis)
+
+            def row(tab):
+                return jnp.asarray(tab)[sidx]
+
+            xs = dict(
+                valid=row(plan.valid),
+                chunk=row(plan.chunk),
+                mb=row(plan.mb),
+                is_src=row(plan.is_src),
+                is_sink=row(plan.is_sink),
+                send_up=row(plan.send_up),
+                send_down=row(plan.send_down),
+                send_local=row(plan.send_local),
+                local_chunk=row(plan.local_chunk),
+                recv_up=row(plan.recv_up),
+                recv_down=row(plan.recv_down),
+            )
+
+            zero_act = jnp.zeros(prog.act_shape, prog.act_dtype)
+            inbox = jnp.zeros((C,) + prog.act_shape, prog.act_dtype)
+            outputs = jnp.zeros((plan.m,) + prog.out_shape, prog.out_dtype)
+
+            def side_at(j):
+                return jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, False),
+                    side_all,
+                )
+
+            def tick(state, t):
+                inbox, caches, outputs = state
+                side_mb = side_at(t["mb"])
+
+                def run_chunk(c):
+                    def body(args):
+                        inbox, caches, outputs = args
+                        x_in = inbox[c]
+
+                        def from_src(_):
+                            return prog.src(shared, side_mb).astype(prog.act_dtype)
+
+                        x = jax.lax.cond(
+                            t["is_src"], from_src, lambda _: x_in, None
+                        )
+                        cache_mb = jax.tree_util.tree_map(
+                            lambda a: jax.lax.dynamic_index_in_dim(
+                                a, t["mb"], 0, False
+                            ),
+                            caches[c],
+                        )
+                        y, new_cache = prog.chunk_fns[c](
+                            stage_params[c], x, side_mb, cache_mb, pos
+                        )
+                        caches = list(caches)
+                        caches[c] = jax.tree_util.tree_map(
+                            lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                                buf, v.astype(buf.dtype), t["mb"], 0
+                            ),
+                            caches[c],
+                            new_cache,
+                        )
+
+                        def to_sink(outputs):
+                            out = prog.sink(shared, y, side_mb)
+                            return jax.lax.dynamic_update_index_in_dim(
+                                outputs, out.astype(outputs.dtype), t["mb"], 0
+                            )
+
+                        outputs = jax.lax.cond(
+                            t["is_sink"], to_sink, lambda o: o, outputs
+                        )
+                        return (inbox, tuple(caches), outputs), y.astype(
+                            prog.act_dtype
+                        )
+
+                    return body
+
+                def idle(args):
+                    return args, zero_act
+
+                branches = [idle] + [run_chunk(c) for c in range(C)]
+                bidx = jnp.where(t["valid"], t["chunk"] + 1, 0)
+                (inbox, caches, outputs), y = jax.lax.switch(
+                    bidx, branches, (inbox, caches, outputs)
+                )
+
+                # local deposit (chunk turn on the same stage)
+                old = jax.lax.dynamic_index_in_dim(inbox, t["local_chunk"], 0, False)
+                dep = jnp.where(t["send_local"], y, old)
+                inbox = jax.lax.dynamic_update_index_in_dim(
+                    inbox, dep, t["local_chunk"], 0
+                )
+
+                # channel permutes (up and down)
+                p_ = plan.p
+                up = jax.lax.ppermute(
+                    jnp.where(t["send_up"], y, zero_act),
+                    self.pipe_axis,
+                    [(i, (i + 1) % p_) for i in range(p_)],
+                )
+                down = jax.lax.ppermute(
+                    jnp.where(t["send_down"], y, zero_act),
+                    self.pipe_axis,
+                    [(i, (i - 1) % p_) for i in range(p_)],
+                )
+                for got, rv in ((up, t["recv_up"]), (down, t["recv_down"])):
+                    old = jax.lax.dynamic_index_in_dim(inbox, rv[1], 0, False)
+                    dep = jnp.where(rv[0] > 0, got, old)
+                    inbox = jax.lax.dynamic_update_index_in_dim(
+                        inbox, dep, rv[1], 0
+                    )
+                return (inbox, caches, outputs), None
+
+            state0 = (inbox, tuple(caches), outputs)
+            (inbox, caches_f, outputs), _ = jax.lax.scan(
+                tick, state0, xs, length=plan.n_ticks
+            )
+            return outputs, caches_f
+
+        return step_fn

@@ -1,0 +1,213 @@
+"""F/B/W split machinery -- the paper's enabling primitive (Sec. 1, Fig. 1).
+
+Every pipeline-stage computation is an :class:`FBWModule` with three passes:
+
+  * ``fwd(params, x, side)   -> (y, res)``       -- forward, saving residuals
+  * ``bwd_x(params, res, dy, side) -> (dx, wctx)`` -- input gradient (B)
+  * ``bwd_w(params, wctx, side)    -> grads``      -- parameter gradient (W)
+
+``B`` carries the inter-stage dependency chain; ``W`` is free to be scheduled
+any time after its ``B`` on the same stage -- exactly the degree of freedom
+the zero-bubble schedules exploit.
+
+:func:`auto_fbw` derives a split for *any* JAX function, with true
+computational separation (not rematerialization):
+
+  1. ``fwd`` runs ``jax.vjp`` once; the returned pullback closure is a pytree
+     (``jax.tree_util.Partial``), so its residuals are extracted by
+     ``tree_flatten`` and stored in pipeline buffers.  Leaves that are merely
+     forwarded parameter / side-input tracers are detected by object identity
+     and *not* stored -- they are re-injected from the stage's own
+     params/side at B/W time (otherwise every in-flight microbatch would
+     duplicate the stage weights).
+  2. ``bwd_x`` rebuilds the pullback and returns only ``dx``: XLA dead-code
+     eliminates the dW matmuls from the B pass.
+  3. ``bwd_w`` rebuilds it again and returns only ``grads``: the dx chain is
+     DCE'd from the W pass.
+
+FLOPs therefore match the paper's Table 1 split (B and W each carry one of
+the two backward matmuls per forward matmul).  The auto path keeps the full
+residual set alive until W (M_W = M_B + |dy|); manual modules may override
+``bwd_x``/``bwd_w`` with a leaner hand-split wctx (M_W < M_B, Table 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FBWModule", "auto_fbw", "SequentialFBW", "loss_seed"]
+
+PyTree = Any
+
+
+class FBWModule:
+    """Protocol + base class for split-backward modules."""
+
+    #: set by subclasses / factories
+    name: str = "fbw"
+
+    def init(self, key: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+    def fwd(self, params: PyTree, x: PyTree, side: PyTree) -> Tuple[PyTree, PyTree]:
+        raise NotImplementedError
+
+    def bwd_x(
+        self, params: PyTree, res: PyTree, dy: PyTree, side: PyTree
+    ) -> Tuple[PyTree, PyTree]:
+        raise NotImplementedError
+
+    def bwd_w(
+        self, params: PyTree, res: PyTree, wctx: PyTree, side: PyTree
+    ) -> PyTree:
+        """Parameter gradients from residuals (held F->W) + the B pass's
+        wctx (the paper's nabla_z extras; for auto modules just dy)."""
+        raise NotImplementedError
+
+    # convenience: fused backward for parity testing against jax.grad
+    def bwd_full(self, params, res, dy, side):
+        dx, wctx = self.bwd_x(params, res, dy, side)
+        return dx, self.bwd_w(params, res, wctx, side)
+
+
+# --------------------------------------------------------------------- #
+# automatic split
+# --------------------------------------------------------------------- #
+_STORE, _PARAM, _SIDE = 0, 1, 2
+
+
+class _AutoFBW(FBWModule):
+    def __init__(
+        self,
+        f: Callable[[PyTree, PyTree, PyTree], PyTree],
+        init_fn: Optional[Callable[[jax.Array], PyTree]] = None,
+        name: str = "auto",
+    ):
+        self.f = f
+        self._init_fn = init_fn
+        self.name = name
+        self._treedef = None
+        self._spec: Optional[List[Tuple[int, int]]] = None
+
+    def init(self, key):
+        if self._init_fn is None:
+            raise NotImplementedError(f"{self.name}: no init_fn provided")
+        return self._init_fn(key)
+
+    # -- forward ---------------------------------------------------------- #
+    def fwd(self, params, x, side):
+        y, pullback = jax.vjp(lambda p, xx: self.f(p, xx, side), params, x)
+        leaves, treedef = jax.tree_util.tree_flatten(pullback)
+        self._treedef = treedef
+        by_id = {}
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(params)):
+            by_id.setdefault(id(leaf), (_PARAM, i))
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(side)):
+            by_id.setdefault(id(leaf), (_SIDE, i))
+        spec: List[Tuple[int, int]] = []
+        stored = []
+        for leaf in leaves:
+            hit = by_id.get(id(leaf))
+            if hit is not None:
+                spec.append(hit)
+            else:
+                spec.append((_STORE, len(stored)))
+                stored.append(leaf)
+        self._spec = spec
+        return y, tuple(stored)
+
+    def _rebuild(self, params, stored, side):
+        if self._treedef is None or self._spec is None:
+            raise RuntimeError(
+                f"{self.name}: fwd must be traced before bwd (call "
+                "ensure_traced or run fwd under jax.eval_shape first)"
+            )
+        p_leaves = jax.tree_util.tree_leaves(params)
+        s_leaves = jax.tree_util.tree_leaves(side)
+        leaves = []
+        for kind, i in self._spec:
+            if kind == _STORE:
+                leaves.append(stored[i])
+            elif kind == _PARAM:
+                leaves.append(p_leaves[i])
+            else:
+                leaves.append(s_leaves[i])
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # -- B: input gradient only (dW chain is DCE'd) ------------------------ #
+    def bwd_x(self, params, res, dy, side):
+        pullback = self._rebuild(params, res, side)
+        _, dx = pullback(dy)
+        return dx, dy  # wctx = the output cotangent only; res rides its buffer
+
+    # -- W: parameter gradient only (dx chain is DCE'd) -------------------- #
+    def bwd_w(self, params, res, wctx, side):
+        dy = wctx
+        pullback = self._rebuild(params, res, side)
+        grads, _ = pullback(dy)
+        return grads
+
+    def ensure_traced(self, params, x, side) -> None:
+        """Populate the static residual spec without running any compute."""
+        jax.eval_shape(lambda p, xx, sd: self.fwd(p, xx, sd), params, x, side)
+
+
+def auto_fbw(
+    f: Callable[[PyTree, PyTree, PyTree], PyTree],
+    init_fn: Optional[Callable[[jax.Array], PyTree]] = None,
+    name: str = "auto",
+) -> _AutoFBW:
+    """Split any ``f(params, x, side) -> y`` into F/B/W passes."""
+    return _AutoFBW(f, init_fn, name)
+
+
+# --------------------------------------------------------------------- #
+# sequential composition (a pipeline chunk = this stage's layer group)
+# --------------------------------------------------------------------- #
+class SequentialFBW(FBWModule):
+    """Compose FBW modules; F runs left-to-right, B right-to-left.
+
+    During B, each sub-module's dy is materialized and packed into the
+    wctx -- these are exactly the paper's "extra gradients (nabla_z L) kept
+    for W" (Table 1).
+    """
+
+    def __init__(self, modules: Sequence[FBWModule], name: str = "seq"):
+        self.modules = list(modules)
+        self.name = name
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.modules))
+        return tuple(mod.init(k) for mod, k in zip(self.modules, keys))
+
+    def fwd(self, params, x, side):
+        res_all = []
+        for mod, p in zip(self.modules, params):
+            x, res = mod.fwd(p, x, side)
+            res_all.append(res)
+        return x, tuple(res_all)
+
+    def bwd_x(self, params, res, dy, side):
+        wctx_all: List[PyTree] = [None] * len(self.modules)
+        for i in reversed(range(len(self.modules))):
+            dy, wctx = self.modules[i].bwd_x(params[i], res[i], dy, side)
+            wctx_all[i] = wctx
+        return dy, tuple(wctx_all)
+
+    def bwd_w(self, params, res, wctx, side):
+        return tuple(
+            mod.bwd_w(p, r, w, side)
+            for mod, p, r, w in zip(self.modules, params, res, wctx)
+        )
+
+    def ensure_traced(self, params, x, side) -> None:
+        jax.eval_shape(lambda p, xx, sd: self.fwd(p, xx, sd), params, x, side)
+
+
+def loss_seed(loss: jax.Array) -> jax.Array:
+    """Cotangent that seeds B at the loss position."""
+    return jnp.ones_like(loss)

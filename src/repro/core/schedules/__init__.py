@@ -1,0 +1,47 @@
+from .ir import (
+    CHANNEL_BWD_DOWN,
+    CHANNEL_BWD_UP,
+    CHANNEL_FWD_DOWN,
+    CHANNEL_FWD_UP,
+    ExecutionPlan,
+    MemoryProfile,
+    Op,
+    OpKind,
+    Placement,
+    Schedule,
+    compile_plan,
+)
+from .baselines import gpipe, interleaved_1f1b, one_f_one_b
+from .handcrafted import zb_h1, zb_h2
+from .zbv import zb_v, zb_v_handcrafted
+from .auto import AutoResult, search, zb_1p, zb_2p
+from .greedy import GreedyConfig, greedy_schedule
+from .refine import local_search
+
+__all__ = [
+    "CHANNEL_BWD_DOWN",
+    "CHANNEL_BWD_UP",
+    "CHANNEL_FWD_DOWN",
+    "CHANNEL_FWD_UP",
+    "ExecutionPlan",
+    "MemoryProfile",
+    "Op",
+    "OpKind",
+    "Placement",
+    "Schedule",
+    "compile_plan",
+    "gpipe",
+    "interleaved_1f1b",
+    "one_f_one_b",
+    "zb_h1",
+    "zb_h2",
+    "zb_v",
+    "zb_v_handcrafted",
+    "AutoResult",
+    "search",
+    "zb_1p",
+    "zb_2p",
+    "GreedyConfig",
+    "greedy_schedule",
+    "local_search",
+]

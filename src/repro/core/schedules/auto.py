@@ -1,0 +1,121 @@
+"""Automatic pipeline scheduling (paper Sec. 3).
+
+``search`` runs the Sec.-3.1 heuristic over the binary-hyperparameter grid
+(the paper's final bullet) and returns the schedule with the lowest simulated
+cost; ``refine`` (see refine.py) optionally polishes it with local search, the
+stand-in for the paper's ILP (Appendix G) in this solver-free environment.
+
+The two canonical memory limits from the paper:
+  * ZB-1p: ``M_limit = p * M_B``   (1F1B-parity memory)
+  * ZB-2p: ``M_limit = 2p * M_B``  (empirical threshold for ~zero bubble)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Tuple
+
+from .greedy import GreedyConfig, greedy_schedule
+from .ir import Placement, Schedule
+
+if False:  # typing only
+    from ..simulator import TimeModel
+
+__all__ = ["AutoResult", "search", "zb_1p", "zb_2p"]
+
+
+@dataclasses.dataclass
+class AutoResult:
+    schedule: Schedule
+    cost: float
+    bubble_rate: float
+    config: GreedyConfig
+
+
+def search(
+    p: int,
+    m: int,
+    times: "TimeModel",
+    m_limit: float,
+    m_b: float = 1.0,
+    m_w: float = 0.5,
+    placement: Optional[Placement] = None,
+    name: str = "zb-auto",
+    refine_steps: int = 0,
+) -> AutoResult:
+    """Grid-search the heuristic's binary hyperparameters (paper Sec. 3.1)."""
+    from ..simulator import simulate
+
+    best: Optional[AutoResult] = None
+    grid = itertools.product([True, False], repeat=5)
+    for warm_extra, fill_small, prefer_f, eager_w, drain_strict in grid:
+        cfg = GreedyConfig(
+            m_limit=m_limit,
+            m_b=m_b,
+            m_w=m_w,
+            warmup_extra_f=warm_extra,
+            fill_small_gaps=fill_small,
+            prefer_f_on_tie=prefer_f,
+            eager_w=eager_w,
+            drain_strict_w=drain_strict,
+        )
+        try:
+            sched = greedy_schedule(p, m, times, cfg, placement, name=name)
+            res = simulate(sched, times)
+        except (RuntimeError, ValueError):
+            continue
+        if best is None or res.cost < best.cost:
+            best = AutoResult(sched, res.cost, res.bubble_rate, cfg)
+    # Portfolio: the handcrafted schedules are valid candidates whenever they
+    # fit the memory limit (the paper itself observes ZB-1p == ZB-H1 when the
+    # memory limit dominates).
+    handcrafted = []
+    if placement is None or placement.n_chunks == 1:
+        from .handcrafted import zb_h1, zb_h2
+
+        handcrafted = [zb_h1(p, m), zb_h2(p, m)]
+    elif placement == Placement.vshape(p):
+        from .zbv import zb_v_handcrafted
+
+        handcrafted = [zb_v_handcrafted(p, m)]
+    for sched in handcrafted:
+        peak = sched.memory_profile(
+            m_b / sched.n_chunks, m_w / sched.n_chunks
+        ).max_peak
+        if peak > m_limit + 1e-9:
+            continue
+        res = simulate(sched, times)
+        if best is None or res.cost < best.cost:
+            sched.name = name
+            best = AutoResult(sched, res.cost, res.bubble_rate, GreedyConfig(m_limit))
+    if best is None:
+        raise RuntimeError(f"no feasible schedule found (p={p}, m={m}, limit={m_limit})")
+    if refine_steps > 0:
+        from .refine import local_search
+
+        refined = local_search(best.schedule, times, max_steps=refine_steps)
+        res = simulate(refined, times)
+        if res.cost < best.cost:
+            best = AutoResult(refined, res.cost, res.bubble_rate, best.config)
+    return best
+
+
+def zb_1p(p: int, m: int, times=None, **kw) -> Schedule:
+    """Auto schedule at 1F1B-parity memory (paper's ZB-1p)."""
+    from ..simulator import TimeModel
+
+    times = times or TimeModel.unit()
+    r = search(p, m, times, m_limit=float(p), name="zb-1p", **kw)
+    r.schedule.name = "zb-1p"
+    return r.schedule
+
+
+def zb_2p(p: int, m: int, times=None, **kw) -> Schedule:
+    """Auto schedule at 2x memory (paper's ZB-2p, ~zero bubble)."""
+    from ..simulator import TimeModel
+
+    times = times or TimeModel.unit()
+    r = search(p, m, times, m_limit=2.0 * p, name="zb-2p", **kw)
+    r.schedule.name = "zb-2p"
+    return r.schedule

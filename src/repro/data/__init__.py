@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLM, TokenFileLM, prefetch
+
+__all__ = ["DataConfig", "SyntheticLM", "TokenFileLM", "prefetch"]

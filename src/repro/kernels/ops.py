@@ -1,0 +1,55 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` selects the kernel path (TPU target; interpret=True on CPU);
+both compose with the F/B/W machinery: ``wgrad_accum`` *is* a W-pass op (no
+vjp needed), ``rmsnorm`` gets a custom_vjp whose backward is the jnp oracle's
+(the forward saves only x and g -- inv-rms is recomputed in VMEM, cheaper
+than an extra HBM tensor).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import rmsnorm_ref, wgrad_accum_ref
+from .rmsnorm import rmsnorm_fused
+from .wgrad_accum import wgrad_accum as _wgrad_pallas
+
+__all__ = ["wgrad_accum", "rmsnorm"]
+
+
+def wgrad_accum(a, g, acc, *, use_pallas=False, interpret=True, **tiles):
+    if use_pallas:
+        return _wgrad_pallas(a, g, acc, interpret=interpret, **tiles)
+    return wgrad_accum_ref(a, g, acc)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, g, use_pallas=False, interpret=True):
+    if use_pallas:
+        return rmsnorm_fused(x, g, interpret=interpret)
+    return rmsnorm_ref(x, g)
+
+
+def _rms_fwd(x, g, use_pallas, interpret):
+    return rmsnorm(x, g, use_pallas, interpret), (x, g)
+
+
+def _rms_bwd(use_pallas, interpret, res, dy):
+    x, g = res
+    x32 = x.astype(jnp.float32)
+    dy32 = dy.astype(jnp.float32)
+    h = x.shape[-1]
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + 1e-6)
+    xhat = x32 * inv
+    dg = jnp.sum(dy32 * xhat, axis=tuple(range(x.ndim - 1)))
+    dxhat = dy32 * (1.0 + g.astype(jnp.float32))
+    dx = inv * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dg.astype(g.dtype)
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)

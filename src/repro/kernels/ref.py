@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def wgrad_accum_ref(a, g, acc):
+    """out = acc + a^T @ g, fp32 accumulation, cast to acc dtype."""
+    d = jnp.float32
+    return (
+        acc.astype(d)
+        + jax.lax.dot_general(
+            a,
+            g,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=d,
+        )
+    ).astype(acc.dtype)
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + g.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,72 @@
+"""Fused weight-gradient accumulation kernel: ``out = acc + a^T @ g``.
+
+The W pass the zero-bubble schedules expose is a long tail of
+``dW += activation^T @ output_grad`` updates (paper App. A reorders exactly
+these for DP overlap).  XLA emits them as matmul + separate add, costing an
+extra full read+write of ``acc`` over HBM; this kernel fuses the accumulate
+into the matmul epilogue, saving 2*H*F*4 bytes of HBM traffic per call --
+the W pass is *memory-bound* at microbatch b=1 (see EXPERIMENTS.md Perf).
+
+TPU mapping: grid (H/bh, F/bf, N/bn) with the contraction (N) innermost so
+each output tile is revisited with its fp32 partial sums held in a VMEM
+scratch accumulator; ``acc`` is added on the first visit and the tile is
+written back once on the last.  Tile defaults are MXU-aligned (128x128) with
+bn=512 for >= 4 systolic passes per tile visit; VMEM working set =
+bn*(bh+bf)*2B + bh*bf*4B = 192 KiB at defaults, well under the ~16 MiB
+budget, leaving headroom for the pipelined next-block prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wgrad_accum"]
+
+
+def _kernel(a_ref, g_ref, acc_ref, out_ref, scratch):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        scratch[...] = acc_ref[...].astype(jnp.float32)
+
+    scratch[...] += jax.lax.dot_general(
+        a_ref[...],
+        g_ref[...],
+        (((0,), (0,)), ((), ())),  # contract over bn: a^T @ g
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        out_ref[...] = scratch[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "bf", "bn", "interpret"))
+def wgrad_accum(a, g, acc, *, bh=128, bf=128, bn=512, interpret=False):
+    """a: (N, H); g: (N, F); acc: (H, F) -> acc + a^T @ g  (acc dtype)."""
+    n, h = a.shape
+    n2, f = g.shape
+    assert n == n2, (a.shape, g.shape)
+    bh, bf, bn = min(bh, h), min(bf, f), min(bn, n)
+    assert h % bh == 0 and f % bf == 0 and n % bn == 0, (
+        f"shapes ({n},{h})x({n},{f}) must tile by (bn={bn},bh={bh},bf={bf})"
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=(h // bh, f // bf, n // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, bf), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bh, bf), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bh, bf), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, f), acc.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, bf), jnp.float32)],
+        interpret=interpret,
+    )(a, g, acc)

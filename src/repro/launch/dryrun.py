@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x shape x mesh).
+
+This proves the distribution config is coherent without real hardware: 512
+placeholder CPU devices stand in for 2 pods x 256 chips; ``.lower()`` +
+``.compile()`` must succeed for every cell, and the compiled artifact yields
+``memory_analysis()`` (fits-per-device evidence) and ``cost_analysis()``
+(FLOPs/bytes for the roofline, Sec. Roofline of EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2_1_8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --multi-pod --out results.json
+
+Scan-based executors keep the HLO small; cost_analysis of a while-loop body
+counts one trip, so the roofline pipeline (benchmarks/roofline.py) derives
+per-tick costs separately and multiplies by the static schedule counts.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, cells_for
+from repro.core.schedules import compile_plan, zb_h1, zb_h2, zb_v
+from repro.core.schedules.ir import Placement
+from repro.launch.mesh import AxisBinding, make_production_mesh
+from repro.launch.steps import TrainStepConfig, build_train_step, build_serve_step
+from repro.models.lm import RunSpec, init_params, side_inputs
+from repro.models.serve import build_serve_program
+
+
+def make_run_spec(cfg, cell, mesh, binding, schedule_name):
+    p, tp, dp = binding.sizes(mesh)
+    gb = cell.global_batch
+    per_pipe = max(1, gb // dp)
+    if cell.kind == "train":
+        b = 1
+        m = max(per_pipe // b, 1)
+    elif cell.kind == "prefill":
+        b = 1
+        m = max(per_pipe, 1)
+    else:  # decode
+        m = min(per_pipe, max(p, 16))
+        b = max(1, per_pipe // m)
+        m = max(1, per_pipe // b)
+    n_chunks = 2 if schedule_name == "zb-v" else 1
+    return RunSpec(
+        p=p,
+        n_chunks=n_chunks,
+        microbatch=b,
+        seq_len=cell.seq_len,
+        m=m,
+        tp_axis=binding.tp,
+        tp_size=tp,
+    )
+
+
+def make_schedule(name, p, m):
+    if name == "zb-v":
+        return zb_v(p, m)
+    if name == "zb-h1":
+        return zb_h1(p, m)
+    return zb_h2(p, m)
+
+
+def abstract_side(cfg, spec, mode, dp):
+    """ShapeDtypeStruct side inputs (global shapes: dp-stacked on axis 0)."""
+    side = jax.eval_shape(lambda: side_inputs(cfg, spec))
+    if mode == "decode":
+        side = {
+            "tokens": jax.ShapeDtypeStruct((spec.m, spec.microbatch, 1), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((spec.m, 1), jnp.int32),
+        }
+
+    def widen(sd):
+        if dp > 1:
+            return jax.ShapeDtypeStruct((dp * sd.shape[0],) + sd.shape[1:], sd.dtype)
+        return sd
+
+    return jax.tree_util.tree_map(widen, side)
+
+
+def dryrun_cell(arch_id, shape_id, multi_pod=False, schedule="zb-h2", verbose=True):
+    cfg = get_config(arch_id)
+    cell = SHAPES[shape_id]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    binding = AxisBinding(
+        pipe="data", tp="model", dp="pod" if multi_pod else None
+    )
+    p, tp, dp = binding.sizes(mesh)
+    spec = make_run_spec(cfg, cell, mesh, binding, schedule)
+
+    t0 = time.time()
+    if cell.kind == "train":
+        sched = make_schedule(schedule, p, spec.m)
+        plan = compile_plan(sched)
+        make, _ = build_train_step(
+            cfg, spec, plan, sched.placement, mesh, binding, TrainStepConfig()
+        )
+        stacked, shared = jax.eval_shape(
+            lambda: init_params(cfg, spec, sched.placement)
+        )
+
+        def widen_stage(sd):
+            return jax.ShapeDtypeStruct((p,) + sd.shape[1:], sd.dtype)
+
+        stacked = tuple(
+            jax.tree_util.tree_map(widen_stage, sp) for sp in stacked
+        )
+        from repro.optim import adamw
+
+        opt = adamw.AdamWState(
+            t=jax.ShapeDtypeStruct((), jnp.int32),
+            m=tuple(
+                jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), sp
+                )
+                for sp in stacked
+            ),
+            v=tuple(
+                jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), sp
+                )
+                for sp in stacked
+            ),
+        )
+        shared_opt = adamw.AdamWState(
+            t=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), shared
+            ),
+            v=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), shared
+            ),
+        )
+        side = abstract_side(cfg, spec, "train", dp)
+        step = make(side)
+        lowered = step.lower(stacked, shared, opt, shared_opt, side)
+        n_ticks = plan.n_ticks
+    else:
+        placement = Placement.linear(p, spec.n_chunks)
+        mode = "prefill" if cell.kind == "prefill" else "decode"
+        cache_len = cell.seq_len
+        make, program, cache_init = build_serve_step(
+            cfg, spec, placement, mesh, binding, mode, cache_len
+        )
+        stacked, shared = jax.eval_shape(
+            lambda: init_params(cfg, spec, placement)
+        )
+
+        def widen_stage(sd):
+            return jax.ShapeDtypeStruct((p,) + sd.shape[1:], sd.dtype)
+
+        stacked = tuple(jax.tree_util.tree_map(widen_stage, sp) for sp in stacked)
+        one = jax.eval_shape(lambda: cache_init(spec.microbatch, cache_len))
+        caches = [
+            jax.tree_util.tree_map(
+                lambda sd: jax.ShapeDtypeStruct(
+                    (p, spec.m) + sd.shape, sd.dtype
+                ),
+                one,
+            )
+            for _ in range(spec.n_chunks)
+        ]
+        side = abstract_side(cfg, spec, mode, dp)
+        step = make(stacked, shared, side, caches)
+        lowered = step.lower(stacked, shared, side, caches)
+        from repro.core.infer_executor import compile_infer_plan
+
+        n_ticks = compile_infer_plan(placement, spec.m).n_ticks
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    result = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "schedule": schedule if cell.kind == "train" else f"fill-drain-{cell.kind}",
+        "p": p,
+        "tp": tp,
+        "dp": dp,
+        "m": spec.m,
+        "microbatch": spec.microbatch,
+        "n_ticks": int(n_ticks),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        "flops": cost.get("flops") if cost else None,
+        "bytes_accessed": cost.get("bytes accessed") if cost else None,
+    }
+    if verbose:
+        print(json.dumps(result))
+        sys.stdout.flush()
+    return result, lowered, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--schedule", default="zb-h2", choices=["zb-h1", "zb-h2", "zb-v"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    results = []
+    for arch in archs:
+        for sid, cell, skip in cells_for(arch):
+            if args.shape != "all" and sid != args.shape:
+                continue
+            if skip:
+                rec = {"arch": arch, "shape": sid, "skipped": skip}
+                print(json.dumps(rec))
+                results.append(rec)
+                continue
+            try:
+                rec, _, _ = dryrun_cell(
+                    arch, sid, multi_pod=args.multi_pod, schedule=args.schedule
+                )
+                results.append(rec)
+            except Exception as e:
+                traceback.print_exc()
+                results.append(
+                    {"arch": arch, "shape": sid, "error": f"{type(e).__name__}: {e}"}
+                )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells OK")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

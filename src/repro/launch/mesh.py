@@ -1,0 +1,49 @@
+"""Production mesh + logical axis binding.
+
+Physical mesh shapes are fixed by the deployment target: (16, 16) =
+("data", "model") per pod; (2, 16, 16) = ("pod", "data", "model") for two
+pods.  The framework binds *logical* roles onto physical axes:
+
+  * pp="data"  -- 16 pipeline stages.  PP tolerates the weakest links
+    (cross-host / cross-pod), which is the paper's motivation for improving
+    it; the per-tick traffic is one (b, s, h) activation per channel.
+  * tp="model" -- 16-way Megatron tensor parallelism on the fastest links.
+  * dp="pod"   -- data parallelism across pods; the gradient all-reduce
+    crosses pods once per step and overlaps with the W tail (paper App. A).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "AxisBinding", "PRODUCTION_BINDING"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisBinding:
+    pipe: str = "data"
+    tp: Optional[str] = "model"
+    dp: Optional[str] = None  # "pod" on the multi-pod mesh
+
+    def sizes(self, mesh) -> Tuple[int, int, int]:
+        ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return (
+            ax[self.pipe],
+            ax[self.tp] if self.tp else 1,
+            ax[self.dp] if self.dp else 1,
+        )
+
+
+PRODUCTION_BINDING = AxisBinding(pipe="data", tp="model", dp=None)

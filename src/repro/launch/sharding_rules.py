@@ -1,0 +1,87 @@
+"""Per-leaf PartitionSpec inference for model parameters.
+
+Parameters are initialized at *global* shapes (ShardCtx(tp_size=1)); the
+rules here place the TP axis on the Megatron-correct dimension per leaf name:
+
+  column-parallel (out-features sharded): wq wk wv wu wg wuq wuk wuv swu swg head
+  row-parallel  (in-features sharded):    wo wd swd
+  expert-parallel (expert dim sharded):   moe wu/wg/wd (ndim 3 before stacking)
+  vocab-parallel (rows sharded):          embed
+  replicated:                             norms, router, masks, biases, lam
+
+shard_map then hands each (stage, tp-rank) exactly the local shard the layer
+code expects (layers compute local head counts / expert counts from
+ShardCtx(tp_size)).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+__all__ = ["stacked_param_specs", "shared_param_specs", "leaf_name"]
+
+_COL = {"wq", "wk", "wv", "wu", "wg", "wuq", "wuk", "wuv", "swu", "swg"}
+_ROW = {"wo", "wd", "swd"}
+
+
+def leaf_name(path) -> str:
+    name = ""
+    for k in path:
+        if hasattr(k, "key") and isinstance(getattr(k, "key"), str):
+            name = k.key
+    return name
+
+
+def _spec_for(name: str, ndim: int, tp: Optional[str], lead_axes) -> P:
+    """lead_axes: tuple of axis names occupying the leading dims (e.g. the
+    stage-stack axis), or () for shared params."""
+    nl = len(lead_axes)
+    body = ndim - nl
+    parts = list(lead_axes)
+    if tp is None or body == 0:
+        return P(*parts) if parts else P()
+    if name in _COL:
+        if body == 3:  # MoE expert weights (e, h, f): shard experts
+            parts += [tp] + [None] * (body - 1)
+        else:
+            parts += [None] * (body - 1) + [tp]
+    elif name in _ROW:
+        if body == 3:  # MoE down-proj (e, f, h): shard experts
+            parts += [tp] + [None] * (body - 1)
+        else:
+            parts += [tp] + [None] * (body - 1)
+    elif name == "embed":
+        parts += [tp] + [None] * (body - 1)
+    elif name == "head":
+        parts += [None] * (body - 1) + [tp]
+    else:
+        parts += [None] * body
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def stacked_param_specs(stacked: PyTree, pipe: str, tp: Optional[str]) -> PyTree:
+    """Specs for per-chunk stage-stacked params: leading dim over pipe."""
+    def one(tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs = [
+            _spec_for(leaf_name(path), leaf.ndim, tp, (pipe,))
+            for path, leaf in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    return tuple(one(t) for t in stacked)
+
+
+def shared_param_specs(shared: PyTree, tp: Optional[str]) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shared)
+    specs = [
+        _spec_for(leaf_name(path), leaf.ndim, tp, ()) for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)

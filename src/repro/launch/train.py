@@ -1,0 +1,185 @@
+"""End-to-end training launcher.
+
+Builds (config, schedule, mesh) -> jitted ZB train step -> fault-tolerant
+driver loop with checkpointing.  Works on any mesh whose axis names match the
+binding -- CPU test meshes (fake devices) and the production (16,16) /
+(2,16,16) meshes alike.
+
+Example (small CPU run, 4 fake devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  python -m repro.launch.train --arch internlm2_1_8b --reduced \
+      --pipe-size 4 --steps 30 --schedule zb-h2
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_reduced
+from ..core.schedules import compile_plan, one_f_one_b, zb_1p, zb_2p, zb_h1, zb_h2, zb_v
+from ..data import DataConfig, SyntheticLM
+from ..models.lm import RunSpec, init_params
+from ..optim import adamw
+from ..runtime import DriverConfig, TrainDriver
+from .mesh import AxisBinding
+from .steps import TrainStepConfig, build_train_step
+
+SCHEDULES = {
+    "1f1b": one_f_one_b,
+    "zb-h1": zb_h1,
+    "zb-h2": zb_h2,
+    "zb-v": zb_v,
+    "zb-1p": zb_1p,
+    "zb-2p": zb_2p,
+}
+
+
+def build_everything(
+    arch: str,
+    reduced: bool,
+    pipe_size: int,
+    tp_size: int,
+    schedule: str,
+    microbatch: int,
+    seq_len: int,
+    m: int,
+    tcfg: TrainStepConfig,
+    mesh=None,
+    binding=None,
+):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    sched = SCHEDULES[schedule](pipe_size, m)
+    plan = compile_plan(sched)
+    if mesh is None:
+        axes = ("data",) if tp_size == 1 else ("data", "model")
+        shape = (pipe_size,) if tp_size == 1 else (pipe_size, tp_size)
+        mesh = jax.make_mesh(shape, axes)
+        binding = AxisBinding(
+            pipe="data", tp="model" if tp_size > 1 else None, dp=None
+        )
+    spec = RunSpec(
+        p=pipe_size,
+        n_chunks=sched.n_chunks,
+        microbatch=microbatch,
+        seq_len=seq_len,
+        m=m,
+        tp_axis=binding.tp,
+        tp_size=tp_size,
+    )
+    make, _ = build_train_step(cfg, spec, plan, sched.placement, mesh, binding, tcfg)
+    return cfg, spec, sched, make, mesh, binding
+
+
+def side_from_batch(batch, spec, s_total_extra=None, cfg=None):
+    m, b, s = spec.m, spec.microbatch, spec.seq_len
+    tokens = jnp.asarray(batch["tokens"]).reshape(m, b, s)
+    labels = jnp.asarray(batch["labels"]).reshape(m, b, s)
+    side = {"tokens": tokens, "labels": labels}
+    s_total = s
+    if cfg is not None and cfg.family == "encdec":
+        ex = cfg.extras_dict()
+        side["frames"] = jnp.zeros(
+            (m, b, ex["s_enc"], ex.get("frontend_dim", cfg.d_model)), cfg.jdtype()
+        )
+        s_total += ex["s_enc"]
+    if cfg is not None and cfg.family == "vlm":
+        ex = cfg.extras_dict()
+        side["patches"] = jnp.zeros(
+            (m, b, ex["n_patches"], ex.get("frontend_dim", cfg.d_model)), cfg.jdtype()
+        )
+        s_total += ex["n_patches"]
+    side["positions"] = jnp.broadcast_to(jnp.arange(s_total), (m, s_total))
+    return side
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt3_1_5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--pipe-size", type=int, default=4)
+    ap.add_argument("--tp-size", type=int, default=1)
+    ap.add_argument("--schedule", default="zb-h2", choices=sorted(SCHEDULES))
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--postval", default="within_step", choices=["within_step", "sync"])
+    args = ap.parse_args()
+
+    tcfg = TrainStepConfig(
+        adamw=adamw.AdamWConfig(lr=args.lr), postval_mode=args.postval
+    )
+    cfg, spec, sched, make, mesh, binding = build_everything(
+        args.arch,
+        args.reduced,
+        args.pipe_size,
+        args.tp_size,
+        args.schedule,
+        args.microbatch,
+        args.seq_len,
+        args.m,
+        tcfg,
+    )
+    data = SyntheticLM(
+        DataConfig(
+            global_batch=spec.m * spec.microbatch,
+            seq_len=spec.seq_len,
+            vocab=cfg.vocab,
+        )
+    )
+    stacked, shared = init_params(cfg, spec, sched.placement)
+    opt = adamw.AdamWState(
+        t=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(lambda a: jnp.zeros(a.shape, jnp.float32), stacked),
+        v=jax.tree_util.tree_map(lambda a: jnp.zeros(a.shape, jnp.float32), stacked),
+    )
+    shared_opt = adamw.AdamWState(
+        t=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(lambda a: jnp.zeros(a.shape, jnp.float32), shared),
+        v=jax.tree_util.tree_map(lambda a: jnp.zeros(a.shape, jnp.float32), shared),
+    )
+
+    side0 = side_from_batch(data.batch_at(0), spec, cfg=cfg)
+    step = make(side0)
+
+    def step_fn(state, batch):
+        side = side_from_batch(batch, spec, cfg=cfg)
+        stacked, shared, opt, shared_opt = (
+            state["params"],
+            state["shared"],
+            state["opt"],
+            state["shared_opt"],
+        )
+        stacked, shared, opt, shared_opt, metrics = step(
+            stacked, shared, opt, shared_opt, side
+        )
+        return (
+            dict(params=stacked, shared=shared, opt=opt, shared_opt=shared_opt),
+            metrics,
+        )
+
+    driver = TrainDriver(
+        DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 2, 10)),
+        step_fn,
+        lambda: dict(params=stacked, shared=shared, opt=opt, shared_opt=shared_opt),
+        data.batch_at,
+    )
+    t0 = time.time()
+    _, metrics = driver.run(args.steps)
+    dt = time.time() - t0
+    losses = [float(m["loss"]) for _, m in metrics]
+    print(f"steps={len(metrics)} wall={dt:.1f}s loss[0]={losses[0]:.4f} "
+          f"loss[-1]={losses[-1]:.4f} schedule={sched.name}")
+    assert losses[-1] < losses[0], "loss must decrease on the synthetic stream"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .lm import ArchConfig, RunSpec, build_program, init_params
+from .modules import ShardCtx
+
+__all__ = ["ArchConfig", "RunSpec", "build_program", "init_params", "ShardCtx"]

@@ -1,0 +1,522 @@
+"""Serving path: prefill (cache build) and decode (one token) per layer kind.
+
+Decode uses the memory-optimal formulations: GQA attends over k/v caches,
+MLA uses the *absorbed* latent form (scores and outputs computed directly
+against the cached latent ``c`` -- the whole point of MLA at decode),
+recurrent kinds (sLSTM/mLSTM/RG-LRU) carry O(1) state, local attention keeps
+a full window cache (ring indexing is a dry-run-neutral refinement).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .lm import ArchConfig, RunSpec, group_layout, layer_cfg
+from .modules import ShardCtx, rmsnorm, rope, _softcap
+
+PyTree = Any
+
+__all__ = [
+    "init_cache",
+    "decode_block",
+    "prefill_block",
+    "make_serve_chunk",
+    "prefill_block_cp",
+]
+
+
+# --------------------------------------------------------------------- #
+# per-kind cache init (batch b, max context S)
+# --------------------------------------------------------------------- #
+def cache_spec(kind: str, cfg: Dict, ctx: ShardCtx, b: int, S: int, dtype):
+    """GLOBAL cache shapes (full kv heads); TP sharding of the heads axis is
+    applied by the PartitionSpecs from :func:`cache_pspec`."""
+    h = cfg["d_model"]
+    hk = cfg["n_kv_heads"]
+    dh = cfg.get("head_dim") or h // cfg["n_heads"]
+    if kind in ("attn", "attn_local"):
+        w = cfg.get("window") if kind == "attn_local" else None
+        Sc = min(S, w) if w else S
+        return {
+            "k": jnp.zeros((b, Sc, hk, dh), dtype),
+            "v": jnp.zeros((b, Sc, hk, dh), dtype),
+        }
+    if kind == "mla":
+        d_kv = cfg.get("kv_lora_rank") or 512
+        d_rope = cfg.get("qk_rope_head_dim") or 64
+        return {
+            "c": jnp.zeros((b, S, d_kv), dtype),
+            "kr": jnp.zeros((b, S, d_rope), dtype),
+        }
+    if kind == "slstm":
+        return {
+            "c": jnp.zeros((b, h), jnp.float32),
+            "n": jnp.zeros((b, h), jnp.float32),
+            "m": jnp.full((b, h), -1e30, jnp.float32),
+        }
+    if kind == "mlstm":
+        nh = cfg["n_heads"]
+        dh_m = h // nh
+        return {"C": jnp.zeros((b, nh, dh_m, dh_m), jnp.float32)}
+    if kind == "rglru":
+        d_r = cfg.get("lru_width") or h
+        return {"h": jnp.zeros((b, d_r), jnp.float32)}
+    if kind == "encdec":
+        s_enc = cfg["s_enc"]
+        return {
+            "k": jnp.zeros((b, S, hk, dh), dtype),
+            "v": jnp.zeros((b, S, hk, dh), dtype),
+            "enc": jnp.zeros((b, s_enc, h), dtype),
+        }
+    if kind in ("mlp", "moe"):
+        return {}
+    raise ValueError(kind)
+
+
+def cache_pspec(kind: str, cfg: Dict, tp: "str | None"):
+    """PartitionSpecs matching :func:`cache_spec` leaves (body dims only)."""
+    from jax.sharding import PartitionSpec as P
+
+    from .modules import _kv_sharded
+
+    kv = P(None, None, tp, None) if (tp and _kv_sharded(cfg)) else P()
+    if kind in ("attn", "attn_local"):
+        return {"k": kv, "v": kv}
+    if kind == "encdec":
+        return {"k": kv, "v": kv, "enc": P()}
+    if kind == "mla":
+        return {"c": P(), "kr": P()}
+    if kind == "slstm":
+        return {"c": P(), "n": P(), "m": P()}
+    if kind == "mlstm":
+        return {"C": P()}
+    if kind == "rglru":
+        return {"h": P()}
+    if kind in ("mlp", "moe"):
+        return {}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------- #
+# decode: one token through one block
+# --------------------------------------------------------------------- #
+def _cached_attend(q, kc, vc, pos, window=None, softcap=None):
+    """q: (b, 1, hq, d); kc/vc: (b, S, hk, d); pos: scalar current index."""
+    hq, hk = q.shape[2], kc.shape[2]
+    rep = hq // hk
+    k = jnp.repeat(kc, rep, axis=2)
+    v = jnp.repeat(vc, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(q.shape[-1])
+    logits = _softcap(logits, softcap)
+    kpos = jnp.arange(kc.shape[1])
+    mask = kpos <= pos
+    if window:
+        mask = mask & (kpos > pos - window)
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def decode_block(kind, p, x, cache, pos, cfg, ctx: ShardCtx):
+    """x: (b, 1, h) -> (y, new_cache)."""
+    from .modules import _kv_sharded, _q_sharded, _tp
+
+    b = x.shape[0]
+    h = cfg["d_model"]
+    tp = _tp(cfg)
+    dh = cfg.get("head_dim") or h // cfg["n_heads"]
+    hq = cfg["n_heads"] // tp if _q_sharded(cfg) else cfg["n_heads"]
+    hk = cfg["n_kv_heads"] // tp if _kv_sharded(cfg) else cfg["n_kv_heads"]
+    posv = jnp.full((1,), pos)
+
+    if kind in ("attn", "attn_local"):
+        window = cfg.get("window") if kind == "attn_local" else None
+        wq = p.get("wq", p.get("wq_rep"))
+        wk = p.get("wk", p.get("wk_rep"))
+        wv = p.get("wv", p.get("wv_rep"))
+        wo = p.get("wo", p.get("wo_rep"))
+        xin = rmsnorm(p["ln"], x)
+        q = rope((xin @ wq).reshape(b, 1, hq, dh), posv)
+        k = rope((xin @ wk).reshape(b, 1, hk, dh), posv)
+        v = (xin @ wv).reshape(b, 1, hk, dh)
+        Sc = cache["k"].shape[1]
+        slot = jnp.mod(pos, Sc) if window else pos
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        from .modules import _match_kv_heads
+
+        kcm, vcm = _match_kv_heads(hq, kc, vc, cfg, ctx)
+        if window:
+            o = _ring_attend(q, kcm, vcm, pos, Sc, cfg.get("attn_softcap"))
+        else:
+            o = _cached_attend(q, kcm, vcm, pos, None, cfg.get("attn_softcap"))
+        o = o.reshape(b, 1, hq * dh) @ wo
+        y = x + (ctx.psum(o) if _q_sharded(cfg) and tp > 1 else o)
+        return y, {"k": kc, "v": vc}
+
+    if kind == "mla":
+        d_kv = cfg.get("kv_lora_rank") or 512
+        d_rope = cfg.get("qk_rope_head_dim") or 64
+        xin = rmsnorm(p["ln"], x)
+        q_all = ((xin @ p["wdq"]) @ p["wuq"]).reshape(b, 1, hq, dh + d_rope)
+        q_nope, q_rope = q_all[..., :dh], rope(q_all[..., dh:], posv)
+        ckv = xin @ p["wdkv"]
+        c_new, kr_new = ckv[..., :d_kv], rope(ckv[..., None, d_kv:], posv)[:, :, 0]
+        cc = jax.lax.dynamic_update_slice(cache["c"], c_new, (0, pos, 0))
+        krc = jax.lax.dynamic_update_slice(cache["kr"], kr_new, (0, pos, 0))
+        # absorbed scores: q_nope @ W_uk^T gives a latent-space query
+        wuk = p["wuk"].reshape(d_kv, hq, dh)
+        q_lat = jnp.einsum("bqhd,khd->bqhk", q_nope, wuk)  # (b,1,hq,d_kv)
+        s_lat = jnp.einsum("bqhk,bsk->bhqs", q_lat, cc)
+        s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, krc)
+        logits = (s_lat + s_rope).astype(jnp.float32) / math.sqrt(dh + d_rope)
+        kpos = jnp.arange(cc.shape[1])
+        logits = jnp.where(kpos[None, None, None, :] <= pos, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhqs,bsk->bqhk", probs, cc)  # (b,1,hq,d_kv)
+        wuv = p["wuv"].reshape(d_kv, hq, dh)
+        o = jnp.einsum("bqhk,khd->bqhd", ctx_lat, wuv)
+        o = o.reshape(b, 1, hq * dh) @ p["wo"]
+        y = x + (ctx.psum(o) if tp > 1 else o)
+        return y, {"c": cc, "kr": krc}
+
+    if kind == "mlp":
+        from .modules import apply_mlp
+
+        return apply_mlp(p, x, cfg, ctx), cache
+
+    if kind == "moe":
+        from .modules import apply_moe
+
+        return apply_moe(p, x, cfg, ctx), cache
+
+    if kind == "slstm":
+        xin = rmsnorm(p["ln"], x)[:, 0]
+        i_t = (xin @ p["si"]).astype(jnp.float32)
+        f_t = (xin @ p["sf"]).astype(jnp.float32)
+        z_t = jnp.tanh(xin @ p["sz"]).astype(jnp.float32)
+        o_t = jax.nn.sigmoid(xin @ p["sog"]).astype(jnp.float32)
+        m_new = jnp.maximum(f_t + cache["m"], i_t)
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(f_t + cache["m"] - m_new)
+        c = f_e * cache["c"] + i_e * z_t
+        n = f_e * cache["n"] + i_e
+        hs = (c / jnp.maximum(n, 1.0)).astype(x.dtype)
+        y = x + ((o_t.astype(x.dtype) * hs) @ p["so"])[:, None]
+        return y, {"c": c, "n": n, "m": m_new}
+
+    if kind == "mlstm":
+        nh = cfg["n_heads"]
+        dh_m = h // nh
+        xin = rmsnorm(p["ln"], x)[:, 0]
+        q = (xin @ p["mq"]).reshape(b, nh, dh_m)
+        k = (xin @ p["mk"]).reshape(b, nh, dh_m) / math.sqrt(dh_m)
+        v = (xin @ p["mv"]).reshape(b, nh, dh_m)
+        f_g = jax.nn.sigmoid((xin @ p["mfg"]).astype(jnp.float32))  # (b, nh)
+        i_g = jax.nn.sigmoid((xin @ p["mig"]).astype(jnp.float32))
+        C = cache["C"] * f_g[..., None, None] + jnp.einsum(
+            "bhd,bhe->bhde", (k.astype(jnp.float32) * i_g[..., None]), v.astype(jnp.float32)
+        )
+        out = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+        y = x + (out.reshape(b, h).astype(x.dtype) @ p["mo"])[:, None]
+        return y, {"C": C}
+
+    if kind == "rglru":
+        xin = rmsnorm(p["ln"], x)[:, 0]
+        u = xin @ p["rx"]
+        gate_y = jax.nn.gelu(xin @ p["ry"])
+        r = jax.nn.sigmoid((u @ p["ra"]).astype(jnp.float32))
+        i = jax.nn.sigmoid((u @ p["ri"]).astype(jnp.float32))
+        log_a = -8.0 * jax.nn.softplus(p["lam"]) * r
+        a = jnp.exp(log_a)
+        hs = a * cache["h"] + jnp.sqrt(
+            jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)
+        ) * i * u.astype(jnp.float32)
+        y = x + ((hs.astype(x.dtype) * gate_y) @ p["ro"])[:, None]
+        return y, {"h": hs}
+
+    if kind == "encdec":
+        # decoder-only step: causal self-attn over cache + cross-attn on enc
+        from .modules import _attn_proj, _match_kv_heads, _q_sharded, apply_mlp, attention
+
+        qs = _q_sharded(cfg)
+        wq, wk, wv, wo = _attn_proj(p["dec_attn"], cfg)
+        xin = rmsnorm(p["dec_attn"]["ln"], x)
+        q = rope((xin @ wq).reshape(b, 1, hq, dh), posv)
+        k = rope((xin @ wk).reshape(b, 1, hk, dh), posv)
+        v = (xin @ wv).reshape(b, 1, hk, dh)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        kcm, vcm = _match_kv_heads(hq, kc, vc, cfg, ctx)
+        o = _cached_attend(q, kcm, vcm, pos)
+        o = o.reshape(b, 1, hq * dh) @ wo
+        xd = x + (ctx.psum(o) if qs and tp > 1 else o)
+        wq2, wk2, wv2, wo2 = _attn_proj(p["xattn"], cfg)
+        hin = rmsnorm(p["xattn"]["ln"], xd)
+        enc = cache["enc"]
+        s_enc = enc.shape[1]
+        q2 = (hin @ wq2).reshape(b, 1, hq, dh)
+        k2 = (enc @ wk2).reshape(b, s_enc, hk, dh)
+        v2 = (enc @ wv2).reshape(b, s_enc, hk, dh)
+        k2, v2 = _match_kv_heads(hq, k2, v2, cfg, ctx)
+        o2 = attention(q2, k2, v2, causal=False)
+        o2 = o2.reshape(b, 1, hq * dh) @ wo2
+        xd = xd + (ctx.psum(o2) if qs and tp > 1 else o2)
+        y = apply_mlp(p["dec_mlp"], xd, cfg, ctx)
+        return y, {"k": kc, "v": vc, "enc": enc}
+
+    raise ValueError(kind)
+
+
+def _ring_attend(q, kc, vc, pos, window, softcap):
+    """Local attention over a ring cache of size `window`."""
+    kpos_slot = jnp.arange(window)
+    # slot i holds absolute position: largest P <= pos with P % window == i
+    n_filled = jnp.minimum(pos + 1, window)
+    abs_pos = pos - jnp.mod(pos - kpos_slot, window)
+    valid = (abs_pos >= 0) & (abs_pos > pos - window) & (abs_pos <= pos)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, jnp.repeat(kc, q.shape[2] // kc.shape[2], axis=2))
+    logits = logits.astype(jnp.float32) / math.sqrt(q.shape[-1])
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, jnp.repeat(vc, q.shape[2] // vc.shape[2], axis=2))
+
+
+# --------------------------------------------------------------------- #
+# prefill: full sequence through one block, emitting the cache
+# --------------------------------------------------------------------- #
+def prefill_block(kind, p, x, cache, cfg, ctx: ShardCtx, positions):
+    """x: (b, s, h) -> (y, cache).  Reuses the train forward, then fills the
+    cache from the computed k/v (attention) or final state (recurrent)."""
+    from .modules import _kv_sharded, _tp, apply_layer
+
+    b, s, h = x.shape
+    dh = cfg.get("head_dim") or h // cfg["n_heads"]
+    hk = (
+        cfg["n_kv_heads"] // _tp(cfg)
+        if _kv_sharded(cfg)
+        else cfg["n_kv_heads"]
+    )
+
+    y = apply_layer(kind, p, x, positions, cfg, ctx)
+
+    if kind in ("attn", "attn_local", "encdec"):
+        if kind == "encdec":
+            pbase = p["dec_attn"]
+            xsrc = x[:, cfg["s_enc"] :]
+        else:
+            pbase = p
+            xsrc = x
+        wk = pbase.get("wk", pbase.get("wk_rep"))
+        wv = pbase.get("wv", pbase.get("wv_rep"))
+        ssrc = xsrc.shape[1]
+        xin = rmsnorm(pbase["ln"], xsrc)
+        k = rope((xin @ wk).reshape(b, ssrc, hk, dh), positions[:ssrc])
+        v = (xin @ wv).reshape(b, ssrc, hk, dh)
+        Sc = cache["k"].shape[1]
+        if Sc >= ssrc:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        else:  # windowed: keep the tail
+            kc = k[:, ssrc - Sc :]
+            vc = v[:, ssrc - Sc :]
+        new = dict(cache)
+        new["k"], new["v"] = kc, vc
+        if kind == "encdec":
+            new["enc"] = y[:, : cfg["s_enc"]]
+        return y, new
+    if kind == "mla":
+        d_kv = cfg.get("kv_lora_rank") or 512
+        xin = rmsnorm(p["ln"], x)
+        ckv = xin @ p["wdkv"]
+        c_, kr = ckv[..., :d_kv], rope(ckv[..., None, d_kv:], positions[:s])[:, :, 0]
+        cc = jax.lax.dynamic_update_slice(cache["c"], c_, (0, 0, 0))
+        krc = jax.lax.dynamic_update_slice(cache["kr"], kr, (0, 0, 0))
+        return y, {"c": cc, "kr": krc}
+    # recurrent kinds: run the decode recurrence once over the sequence to
+    # produce the final state (prefill roofline is dominated by the forward).
+    if kind in ("slstm", "mlstm", "rglru"):
+        def step(cc, t):
+            xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)
+            _, nc = decode_block(kind, p, xt, cc, t, cfg, ctx)
+            return nc, None
+
+        cache, _ = jax.lax.scan(step, cache, jnp.arange(s))
+        return y, cache
+    return y, cache
+
+
+# --------------------------------------------------------------------- #
+# serve chunk: the per-stage layer group, cache-threaded
+# --------------------------------------------------------------------- #
+def build_serve_program(cfg: ArchConfig, spec: RunSpec, placement, mode: str):
+    """Returns (InferProgram, cache_init(b, S) for one stage, one group)."""
+    from ..core.infer_executor import InferProgram
+    from .lm import make_src
+
+    ctx = ShardCtx(tp_axis=spec.tp_axis, tp_size=spec.tp_size)
+    chunk_fn, cache_init, cache_pspecs = make_serve_chunk(cfg, spec, mode)
+    src_train, _ = make_src(cfg, ctx)
+
+    def src(shared, side_mb):
+        if mode == "decode":
+            from .lm import _embed_lookup
+
+            return _embed_lookup(shared, side_mb["tokens"], cfg, ctx)
+        return src_train(shared, side_mb)
+
+    def sink(shared, y, side_mb):
+        yl = y[:, -1:]  # next-token logits from the last position
+        yn = rmsnorm(shared["final_ln"], yl)
+        return (yn @ shared["head"])[:, 0]
+
+    if mode == "decode":
+        s_total = 1
+    else:
+        s_total = spec.seq_len
+        ex = cfg.extras_dict()
+        if cfg.family == "encdec":
+            s_total += ex["s_enc"]
+        elif cfg.family == "vlm":
+            s_total += ex["n_patches"]
+
+    from .modules import pad_to_multiple
+
+    v_l = pad_to_multiple(cfg.vocab, max(1, spec.tp_size)) // max(1, spec.tp_size)
+    program = InferProgram(
+        chunk_fns=[chunk_fn] * spec.n_chunks,
+        src=src,
+        sink=sink,
+        act_shape=(spec.microbatch, s_total, cfg.d_model),
+        act_dtype=cfg.jdtype(),
+        out_shape=(spec.microbatch, v_l),
+        out_dtype=cfg.jdtype(),
+    )
+    return program, cache_init, cache_pspecs
+
+
+def make_serve_chunk(cfg: ArchConfig, spec: RunSpec, mode: str):
+    """Returns (chunk_fn(params, x, side, cache, pos) -> (y, cache),
+    cache_init(b, S) -> pytree) for one chunk."""
+    ctx = ShardCtx(tp_axis=spec.tp_axis, tp_size=spec.tp_size)
+    blocks, g = group_layout(cfg, spec.p, spec.n_chunks)
+    lcfg = layer_cfg(cfg, spec.tp_size)
+
+    def cache_init(b: int, S: int):
+        return tuple(
+            tuple(
+                cache_spec(kind, lcfg, ctx, b, S, cfg.jdtype()) for kind in kinds
+            )
+            for kinds in blocks
+        )
+
+    def cache_pspecs(tp_axis):
+        return tuple(
+            tuple(cache_pspec(kind, lcfg, tp_axis) for kind in kinds)
+            for kinds in blocks
+        )
+
+    def chunk_fn(params, x, side, cache, pos):
+        new_cache = []
+        for bi, kinds in enumerate(blocks):
+            mask = params["mask"][bi].astype(x.dtype)
+            xb = x
+            kc = []
+            for ki, kind in enumerate(kinds):
+                if mode == "decode":
+                    xb, c2 = decode_block(
+                        kind, params["blocks"][bi][ki], xb, cache[bi][ki], pos, lcfg, ctx
+                    )
+                else:
+                    xb, c2 = prefill_block(
+                        kind,
+                        params["blocks"][bi][ki],
+                        xb,
+                        cache[bi][ki],
+                        lcfg,
+                        ctx,
+                        side["positions"],
+                    )
+                kc.append(c2)
+            x = mask * xb + (1.0 - mask) * x
+            new_cache.append(tuple(kc))
+        return x, tuple(new_cache)
+
+    return chunk_fn, cache_init, cache_pspecs
+
+
+# --------------------------------------------------------------------- #
+# context-parallel prefill (beyond-paper; EXPERIMENTS.md Perf iter 3)
+# --------------------------------------------------------------------- #
+def prefill_block_cp(kind, p, x_loc, cfg, ctx: ShardCtx, q_offset, s_full):
+    """Sequence-sharded prefill: x_loc is this rank's (b, s/cp, h) slice and
+    every rank holds FULL weights (cfg built with tp_size=1).
+
+    MLP/norms are per-token: zero collectives.  Attention computes local
+    q/k/v and all-gathers only K and V -- for GQA that is 2 * (hk*dh)/h of an
+    activation per block instead of two full-activation all-reduces: ~16x
+    less wire traffic for ds-67b (hk*dh = h/8, TP would pay 4x act).
+
+    Weights are replicated per rank (no TP memory sharding); at inference
+    there is no optimizer state, so a 67B/16-stage stage (~8.4 GB bf16) fits
+    v5e HBM.  Returns (y_loc, (k_loc, v_loc)) -- the cache stays seq-sharded.
+    """
+    from .modules import _attend_dense, apply_mlp, rope as _rope
+
+    b, s_loc, h = x_loc.shape
+    if kind == "mlp":
+        return apply_mlp(p, x_loc, cfg, ctx), None
+    if kind not in ("attn", "attn_local"):
+        raise ValueError(f"context-parallel prefill: unsupported kind {kind}")
+    window = cfg.get("window") if kind == "attn_local" else None
+    hq, hk = cfg["n_heads"], cfg["n_kv_heads"]
+    dh = cfg.get("head_dim") or h // hq
+    wq = p.get("wq", p.get("wq_rep"))
+    wk = p.get("wk", p.get("wk_rep"))
+    wv = p.get("wv", p.get("wv_rep"))
+    wo = p.get("wo", p.get("wo_rep"))
+    xin = rmsnorm(p["ln"], x_loc)
+    pos_loc = q_offset + jnp.arange(s_loc)
+    q = _rope((xin @ wq).reshape(b, s_loc, hq, dh), pos_loc)
+    k = _rope((xin @ wk).reshape(b, s_loc, hk, dh), pos_loc)
+    v = (xin @ wv).reshape(b, s_loc, hk, dh)
+    if ctx.tp_axis is not None:
+        k_all = jax.lax.all_gather(k, ctx.tp_axis, axis=1, tiled=True)
+        v_all = jax.lax.all_gather(v, ctx.tp_axis, axis=1, tiled=True)
+    else:
+        k_all, v_all = k, v
+    rep = hq // hk
+    if rep > 1:
+        k_all = jnp.repeat(k_all, rep, axis=2)
+        v_all = jnp.repeat(v_all, rep, axis=2)
+    o = _attend_dense(
+        q, k_all, v_all, True, window, cfg.get("attn_softcap"),
+        q_offset=q_offset,
+    ) if s_loc <= 2048 else _cp_chunked(q, k_all, v_all, window, cfg, q_offset)
+    y = x_loc + o.reshape(b, s_loc, hq * dh) @ wo
+    return y, {"k": k, "v": v}
+
+
+def _cp_chunked(q, k_all, v_all, window, cfg, q_offset, block=1024):
+    from .modules import _attend_dense
+
+    b, s_loc, hq, dh = q.shape
+    nb = -(-s_loc // block)
+
+    @jax.checkpoint
+    def one(args):
+        qi, i = args
+        return _attend_dense(
+            qi, k_all, v_all, True, window, cfg.get("attn_softcap"),
+            q_offset=q_offset + i * block,
+        )
+
+    qb = q.reshape(b, nb, block, hq, dh).transpose(1, 0, 2, 3, 4)
+    _, out = jax.lax.scan(lambda _, a: (None, one(a)), None, (qb, jnp.arange(nb)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s_loc, hq, dh)

@@ -1,0 +1,12 @@
+from . import adamw, postval
+from .adamw import AdamWConfig, AdamWState
+from .postval import Decision, GradStats
+
+__all__ = [
+    "adamw",
+    "postval",
+    "AdamWConfig",
+    "AdamWState",
+    "Decision",
+    "GradStats",
+]

@@ -1,0 +1,120 @@
+"""AdamW with arithmetically-reversible in-place rollback (paper Alg. 1).
+
+The optimizer-post-validation strategy (paper Sec. 4) applies an *optimistic*
+step using partially-reduced global statistics; if the fully-reduced
+statistics later prove the decision wrong (clipping needed / NaN), the step is
+rolled back and redone.  Storing a historic copy of params+moments would cost
+3x memory and copies; instead the AdamW step function is inverted exactly:
+
+    STEP:      t+=1;  m = b1 m + (1-b1) g;   v = b2 v + (1-b2) g^2
+               theta = theta - lr*wd*theta - lr * m_hat / (sqrt(v_hat)+eps)
+    ROLLBACK:  theta = (theta + lr * m_hat / (sqrt(v_hat)+eps)) / (1 - lr*wd)
+               m = (m - (1-b1) g)/b1;  v = (v - (1-b2) g^2)/b2;  t-=1
+
+Rollback needs only ``g`` (still resident from the backward) and recomputes
+the previous state bit-for-bit up to float rounding -- no extra memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "step", "rollback"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0  # global-norm clip threshold
+
+
+class AdamWState(NamedTuple):
+    t: jax.Array  # scalar int32 timestep
+    m: PyTree  # first moment, fp32
+    v: PyTree  # second moment, fp32
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(t=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+
+def _hat(x, beta, t):
+    return x / (1.0 - beta**t)
+
+
+def step(
+    params: PyTree,
+    state: AdamWState,
+    grads: PyTree,
+    cfg: AdamWConfig,
+    scale: Union[jax.Array, float] = 1.0,
+) -> tuple[PyTree, AdamWState]:
+    """One AdamW step on ``scale * grads`` (scale carries the clip factor)."""
+    t = state.t + 1
+    tf = t.astype(jnp.float32)
+    p_leaves, tdef = jax.tree_util.tree_flatten(params)
+    m_leaves = jax.tree_util.tree_leaves(state.m)
+    v_leaves = jax.tree_util.tree_leaves(state.v)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+
+    new_p, new_m, new_v = [], [], []
+    for p, m, v, g in zip(p_leaves, m_leaves, v_leaves, g_leaves):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        m_hat = _hat(m, cfg.b1, tf)
+        v_hat = _hat(v, cfg.b2, tf)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - cfg.lr * cfg.weight_decay * p32 - cfg.lr * m_hat / (
+            jnp.sqrt(v_hat) + cfg.eps
+        )
+        new_p.append(p32.astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unf = lambda leaves: jax.tree_util.tree_unflatten(tdef, leaves)
+    return unf(new_p), AdamWState(t=t, m=unf(new_m), v=unf(new_v))
+
+
+def rollback(
+    params: PyTree,
+    state: AdamWState,
+    grads: PyTree,
+    cfg: AdamWConfig,
+    scale: Union[jax.Array, float] = 1.0,
+) -> tuple[PyTree, AdamWState]:
+    """Exact inverse of :func:`step` (paper Algorithm 1, lines 13-20)."""
+    tf = state.t.astype(jnp.float32)
+    p_leaves, tdef = jax.tree_util.tree_flatten(params)
+    m_leaves = jax.tree_util.tree_leaves(state.m)
+    v_leaves = jax.tree_util.tree_leaves(state.v)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+
+    prev_p, prev_m, prev_v = [], [], []
+    for p, m, v, g in zip(p_leaves, m_leaves, v_leaves, g_leaves):
+        g = g.astype(jnp.float32) * scale
+        m_hat = _hat(m, cfg.b1, tf)
+        v_hat = _hat(v, cfg.b2, tf)
+        p32 = p.astype(jnp.float32)
+        p32 = (p32 + cfg.lr * m_hat / (jnp.sqrt(v_hat) + cfg.eps)) / (
+            1.0 - cfg.lr * cfg.weight_decay
+        )
+        prev_p.append(p32.astype(p.dtype))
+        prev_m.append((m - (1.0 - cfg.b1) * g) / cfg.b1)
+        prev_v.append((v - (1.0 - cfg.b2) * g * g) / cfg.b2)
+
+    unf = lambda leaves: jax.tree_util.tree_unflatten(tdef, leaves)
+    return unf(prev_p), AdamWState(t=state.t - 1, m=unf(prev_m), v=unf(prev_v))

@@ -1,0 +1,81 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+At multi-pod scale the once-per-step gradient all-reduce crosses the slowest
+links (pods).  ``compress``/``decompress`` implement per-leaf symmetric int8
+quantization (absmax scaling) and bf16 truncation; ``ef_correct`` carries the
+quantization residual into the next step (error feedback), which keeps SGD /
+Adam convergence unbiased in expectation.
+
+Wire savings: bf16 = 2x over fp32 grads, int8 = 4x.  Compression is applied
+*before* the dp psum and decompressed after (psum of int8 is done in int32).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["compress", "decompress", "ef_correct", "compressed_psum"]
+
+
+def compress(g: jax.Array, mode: str) -> Tuple[jax.Array, Optional[jax.Array]]:
+    if mode == "bf16":
+        return g.astype(jnp.bfloat16), None
+    if mode == "int8":
+        scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+        return q.astype(jnp.int8), scale
+    raise ValueError(mode)
+
+
+def decompress(q: jax.Array, scale: Optional[jax.Array], dtype) -> jax.Array:
+    if q.dtype == jnp.int8 or q.dtype == jnp.int32:
+        return (q.astype(jnp.float32) * scale).astype(dtype)
+    return q.astype(dtype)
+
+
+def ef_correct(g: jax.Array, restored: jax.Array) -> jax.Array:
+    """Error-feedback residual to add to next step's gradient."""
+    return (g.astype(jnp.float32) - restored.astype(jnp.float32)).astype(g.dtype)
+
+
+def compressed_psum(
+    grads: PyTree, axis_name: str, mode: str = "bf16", ef: Optional[PyTree] = None
+) -> Tuple[PyTree, PyTree]:
+    """psum over ``axis_name`` with compressed payloads + error feedback.
+
+    Returns (summed grads in original dtype, new error-feedback state).
+    """
+
+    def one(g, e):
+        g_in = g if e is None else g + e.astype(g.dtype)
+        if mode == "int8":
+            # all ranks must quantize in the SAME units: share the absmax
+            local_max = jnp.max(jnp.abs(g_in)).astype(jnp.float32)
+            scale = jax.lax.pmax(local_max, axis_name) / 127.0 + 1e-12
+            q = jnp.clip(
+                jnp.round(g_in.astype(jnp.float32) / scale), -127, 127
+            ).astype(jnp.int8)
+            s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            restored_local = decompress(q, scale, g.dtype)
+            out = decompress(s, scale, g.dtype)
+        else:
+            q, _ = compress(g_in, mode)
+            s = jax.lax.psum(q, axis_name)
+            restored_local = q.astype(g.dtype)
+            out = s.astype(g.dtype)
+        new_e = ef_correct(g_in, restored_local)
+        return out, new_e
+
+    if ef is None:
+        ef = jax.tree_util.tree_map(lambda _: None, grads)
+    pairs = jax.tree_util.tree_map(
+        one, grads, ef, is_leaf=lambda x: x is None or isinstance(x, jax.Array)
+    )
+    out = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return out, new_ef

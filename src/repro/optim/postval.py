@@ -1,0 +1,204 @@
+"""Optimizer post-validation (paper Sec. 4, Fig. 4, Appendix C).
+
+Classic pipelines block on a global all-reduce before every optimizer step
+(NaN/Inf check for mixed precision, global grad-norm for clipping); that
+synchronization breaks the zero-bubble parallelogram.  Post-validation
+replaces it:
+
+  1. a *partially* reduced state flows stage-to-stage along the pipe axis
+     (folded into the schedule's tail; a ppermute chain, never a blocking
+     all-reduce);
+  2. each stage applies an *optimistic* step controlled by its partial state
+     (skip if a NaN is already visible or the partial norm already exceeds
+     the clip threshold);
+  3. when the fully reduced state arrives, each stage validates its decision
+     and, on mis-speculation, performs the in-place rollback (Alg. 1) and
+     redoes the step with the correct global clip scale.
+
+Two modes:
+  * ``within_step``: relay + validation inside the same train step (the relay
+    overlaps the W tail; nothing is carried across steps);
+  * ``deferred``: the paper's placement -- validation happens at the head of
+    the *next* step; gradients and the speculative decision ride the train
+    carry.  Numerically both are exactly the synchronous semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import adamw
+
+PyTree = Any
+
+__all__ = [
+    "GradStats",
+    "Decision",
+    "local_stats",
+    "combine_stats",
+    "decide_partial",
+    "decide_global",
+    "optimistic_step",
+    "validate_and_fix",
+    "pipe_prefix_stats",
+    "sync_step",
+]
+
+
+class GradStats(NamedTuple):
+    sumsq: jax.Array  # sum of squared gradient entries (fp32 scalar)
+    nonfinite: jax.Array  # bool scalar: any NaN/Inf seen
+
+
+class Decision(NamedTuple):
+    applied: jax.Array  # bool: did we apply an (unscaled) optimistic step
+    scale: jax.Array  # f32: the scale used (1.0 for optimistic steps)
+
+
+def local_stats(grads: PyTree) -> GradStats:
+    leaves = jax.tree_util.tree_leaves(grads)
+    sumsq = jnp.zeros((), jnp.float32)
+    bad = jnp.zeros((), bool)
+    for g in leaves:
+        g32 = g.astype(jnp.float32)
+        sumsq = sumsq + jnp.sum(g32 * g32)
+        bad = bad | ~jnp.all(jnp.isfinite(g32))
+    return GradStats(sumsq, bad)
+
+
+def combine_stats(a: GradStats, b: GradStats) -> GradStats:
+    return GradStats(a.sumsq + b.sumsq, a.nonfinite | b.nonfinite)
+
+
+def pipe_prefix_stats(stats: GradStats, axis_name: str) -> Tuple[GradStats, GradStats]:
+    """(inclusive prefix, full) reduction along the pipe axis.
+
+    Implemented as a log-depth scan of ppermutes (never a blocking fused
+    all-reduce at the optimizer boundary; each hop is a neighbour exchange
+    that XLA overlaps with the W tail).  Returns the partially-reduced state
+    each stage would see in the paper's relay plus the fully-reduced state.
+    """
+    p = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    pre_sq, pre_bad = stats.sumsq, stats.nonfinite.astype(jnp.float32)
+    shift = 1
+    while shift < p:
+        perm = [(i, i + shift) for i in range(p - shift)]
+        got_sq = jax.lax.ppermute(pre_sq, axis_name, perm)
+        got_bad = jax.lax.ppermute(pre_bad, axis_name, perm)
+        take = idx >= shift
+        pre_sq = pre_sq + jnp.where(take, got_sq, 0.0)
+        pre_bad = jnp.maximum(pre_bad, jnp.where(take, got_bad, 0.0))
+        shift *= 2
+    partial = GradStats(pre_sq, pre_bad > 0.5)
+    # full state: the last stage's prefix, broadcast back (paper: propagated
+    # during the next warm-up); a reversed ppermute chain again.
+    full_sq, full_bad = pre_sq, pre_bad
+    shift = 1
+    while shift < p:
+        perm = [(i, i - shift) for i in range(shift, p)]
+        got_sq = jax.lax.ppermute(full_sq, axis_name, perm)
+        got_bad = jax.lax.ppermute(full_bad, axis_name, perm)
+        take = idx < p - shift
+        full_sq = jnp.where(take, got_sq, full_sq)
+        full_bad = jnp.where(take, got_bad, full_bad)
+        shift *= 2
+    full = GradStats(full_sq, full_bad > 0.5)
+    return partial, full
+
+
+def decide_partial(partial: GradStats, cfg: adamw.AdamWConfig) -> Decision:
+    """Optimistic decision from a partially-reduced state (paper Sec. 4)."""
+    clip = cfg.grad_clip
+    ok = ~partial.nonfinite
+    if clip is not None:
+        ok = ok & (jnp.sqrt(partial.sumsq) <= clip)
+    return Decision(applied=ok, scale=jnp.float32(1.0))
+
+
+def decide_global(full: GradStats, cfg: adamw.AdamWConfig) -> Decision:
+    """The synchronous-semantics decision from the fully-reduced state."""
+    norm = jnp.sqrt(full.sumsq)
+    if cfg.grad_clip is None:
+        scale = jnp.float32(1.0)
+    else:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(norm, 1e-20))
+    return Decision(applied=~full.nonfinite, scale=scale.astype(jnp.float32))
+
+
+def optimistic_step(
+    params: PyTree,
+    state: adamw.AdamWState,
+    grads: PyTree,
+    partial: GradStats,
+    cfg: adamw.AdamWConfig,
+) -> Tuple[PyTree, adamw.AdamWState, Decision]:
+    dec = decide_partial(partial, cfg)
+
+    def do(_):
+        return adamw.step(params, state, grads, cfg, scale=1.0)
+
+    def skip(_):
+        return params, state
+
+    new_params, new_state = jax.lax.cond(dec.applied, do, skip, None)
+    return new_params, new_state, dec
+
+
+def validate_and_fix(
+    params: PyTree,
+    state: adamw.AdamWState,
+    grads: PyTree,
+    speculative: Decision,
+    full: GradStats,
+    cfg: adamw.AdamWConfig,
+) -> Tuple[PyTree, adamw.AdamWState, jax.Array]:
+    """Rollback + redo when the optimistic decision was wrong.
+
+    Returns (params, state, amended?) where amended is a bool scalar counting
+    mis-speculations (rare in robust training -- the paper's premise).
+    """
+    want = decide_global(full, cfg)
+    # legit iff: we applied with scale 1 and the true decision is apply@1.0,
+    # or we skipped and the true decision is skip.
+    applied_ok = speculative.applied & want.applied & (want.scale >= 1.0 - 1e-12)
+    skipped_ok = (~speculative.applied) & (~want.applied)
+    legit = applied_ok | skipped_ok
+
+    def fix(_):
+        # undo whatever we did, then redo the true decision
+        def undo(_):
+            return adamw.rollback(params, state, grads, cfg, scale=1.0)
+
+        p0, s0 = jax.lax.cond(speculative.applied, undo, lambda _: (params, state), None)
+
+        def redo(_):
+            return adamw.step(p0, s0, grads, cfg, scale=want.scale)
+
+        return jax.lax.cond(want.applied, redo, lambda _: (p0, s0), None)
+
+    new_params, new_state = jax.lax.cond(
+        legit, lambda _: (params, state), fix, None
+    )
+    return new_params, new_state, ~legit
+
+
+def sync_step(
+    params: PyTree,
+    state: adamw.AdamWState,
+    grads: PyTree,
+    cfg: adamw.AdamWConfig,
+    stats: Optional[GradStats] = None,
+) -> Tuple[PyTree, adamw.AdamWState]:
+    """Reference synchronous semantics: blocking global decision, then step."""
+    stats = stats if stats is not None else local_stats(grads)
+    want = decide_global(stats, cfg)
+
+    def do(_):
+        return adamw.step(params, state, grads, cfg, scale=want.scale)
+
+    return jax.lax.cond(want.applied, do, lambda _: (params, state), None)

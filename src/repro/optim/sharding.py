@@ -1,0 +1,64 @@
+"""ZeRO-1: optimizer-state sharding over the data-parallel axis.
+
+Each dp rank owns 1/dp of every parameter (flattened + padded), keeps
+optimizer moments only for its shard, and after the step all-gathers the
+updated shards.  Gradients arrive via reduce-scatter instead of all-reduce
+(same wire bytes, half the per-rank reduction work).  Used inside shard_map
+(axis must be bound).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["shard_leaf", "unshard_leaf", "scatter_grads", "gather_params"]
+
+
+def _pad_len(n: int, dp: int) -> int:
+    return (n + dp - 1) // dp * dp
+
+
+def shard_leaf(x: jax.Array, axis_name: str) -> jax.Array:
+    """This rank's flat shard of a (replicated) leaf."""
+    dp = jax.lax.axis_size(axis_name)
+    r = jax.lax.axis_index(axis_name)
+    flat = x.reshape(-1)
+    k = _pad_len(flat.shape[0], dp) // dp
+    flat = jnp.pad(flat, (0, k * dp - flat.shape[0]))
+    return jax.lax.dynamic_slice_in_dim(flat, r * k, k)
+
+
+def unshard_leaf(shard: jax.Array, shape, dtype, axis_name: str) -> jax.Array:
+    """All-gather shards back into the full leaf."""
+    full = jax.lax.all_gather(shard, axis_name, axis=0, tiled=True)
+    n = 1
+    for d in shape:
+        n *= d
+    return full[:n].reshape(shape).astype(dtype)
+
+
+def scatter_grads(grads: PyTree, axis_name: str) -> PyTree:
+    """reduce-scatter: each rank gets the dp-mean of its flat grad shard."""
+    dp = jax.lax.axis_size(axis_name)
+
+    def one(g):
+        flat = g.reshape(-1)
+        k = _pad_len(flat.shape[0], dp)
+        flat = jnp.pad(flat, (0, k - flat.shape[0]))
+        return (
+            jax.lax.psum_scatter(flat, axis_name, scatter_dimension=0, tiled=True)
+            / dp
+        )
+
+    return jax.tree_util.tree_map(one, grads)
+
+
+def gather_params(shards: PyTree, proto: PyTree, axis_name: str) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s, p: unshard_leaf(s, p.shape, p.dtype, axis_name), shards, proto
+    )

@@ -1,0 +1,13 @@
+from .driver import (
+    DriverConfig,
+    TrainDriver,
+    rebalance_layers,
+    replan_for_stragglers,
+)
+
+__all__ = [
+    "DriverConfig",
+    "TrainDriver",
+    "rebalance_layers",
+    "replan_for_stragglers",
+]

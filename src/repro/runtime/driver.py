@@ -1,0 +1,180 @@
+"""Fault-tolerant training driver.
+
+Production loop responsibilities implemented here:
+  * checkpoint every N steps (atomic, sharded), restart-from-latest;
+  * step retry on transient failure (the paper-level analogue of a preempted
+    pod: re-build the jitted step and replay from the last checkpoint --
+    deterministic data makes replay exact);
+  * straggler mitigation: accept a per-stage time profile (from the runtime's
+    monitor) and *re-search the schedule* for the imbalanced profile -- the
+    ZB auto-scheduler is the mitigation mechanism (DESIGN.md Sec. 2);
+  * elastic scaling: re-plan schedule + re-shard checkpoint for a new p
+    (checkpoint/store.reshard_stages).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import store
+from ..core.schedules import search
+from ..core.simulator import TimeModel
+
+log = logging.getLogger("repro.driver")
+
+__all__ = [
+    "DriverConfig",
+    "TrainDriver",
+    "replan_for_stragglers",
+    "rebalance_layers",
+]
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_retries: int = 3
+    keep_last: int = 3
+
+
+def replan_for_stragglers(
+    p: int,
+    m: int,
+    base_times: TimeModel,
+    stage_scale,
+    m_limit: float,
+):
+    """Re-search the ZB schedule for an observed per-stage slowdown profile.
+
+    Returns (schedule, predicted_cost, baseline_cost): the baseline is the
+    balanced-profile schedule evaluated under the *observed* profile.
+    """
+    from ..core.simulator import simulate
+
+    observed = dataclasses.replace(base_times, stage_scale=tuple(stage_scale))
+    balanced = search(p, m, base_times, m_limit=m_limit)
+    base_cost = simulate(balanced.schedule, observed).cost
+    replanned = search(p, m, observed, m_limit=m_limit)
+    return replanned.schedule, replanned.cost, base_cost
+
+
+def rebalance_layers(
+    p: int,
+    m: int,
+    base_times: TimeModel,
+    stage_scale,
+    layers_per_stage: int,
+    m_limit: float,
+):
+    """Straggler mitigation for a uniformly-slow stage: move layers off it.
+
+    Op re-ordering alone cannot shrink the max-span of a stage whose every
+    pass is slower; re-partitioning layers can.  Greedy: move one layer from
+    the most-loaded stage (observed scale x layer count) to the least-loaded
+    neighbourhood while the simulated ZB cost improves.  Returns
+    (layer_counts, schedule, new_cost, old_cost) -- the elastic-reshard
+    machinery (checkpoint.store.reshard_stages) then moves the weights.
+    """
+    from ..core.schedules import zb_h2
+    from ..core.simulator import simulate
+
+    g0 = layers_per_stage
+    layers = [g0] * p
+
+    def cost(lay):
+        scale = tuple(stage_scale[s] * lay[s] / g0 for s in range(p))
+        tm = dataclasses.replace(base_times, stage_scale=scale)
+        return simulate(zb_h2(p, m), tm).cost
+
+    old_cost = cost(layers)
+    best = old_cost
+    for _ in range(p * g0):
+        load = [stage_scale[s] * layers[s] for s in range(p)]
+        src = int(np.argmax(load))
+        dst = int(np.argmin(load))
+        if layers[src] <= 1 or src == dst:
+            break
+        cand = list(layers)
+        cand[src] -= 1
+        cand[dst] += 1
+        c = cost(cand)
+        if c >= best - 1e-9:
+            break
+        layers, best = cand, c
+    scale = tuple(stage_scale[s] * layers[s] / g0 for s in range(p))
+    tm = dataclasses.replace(base_times, stage_scale=scale)
+    final = search(p, m, tm, m_limit=m_limit)
+    return layers, final.schedule, min(final.cost, best), old_cost
+
+
+class TrainDriver:
+    """step_fn(state, batch) -> (state, metrics); state is a dict pytree."""
+
+    def __init__(
+        self,
+        cfg: DriverConfig,
+        step_fn: Callable,
+        init_state: Callable[[], Dict[str, Any]],
+        data_at: Callable[[int], Any],
+    ):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.init_state = init_state
+        self.data_at = data_at
+
+    def _restore_or_init(self):
+        last = store.latest_step(self.cfg.ckpt_dir)
+        state = self.init_state()
+        if last is None:
+            return state, 0
+        state, manifest = store.restore(self.cfg.ckpt_dir, last, state)
+        log.info("restored checkpoint step %d", last)
+        return state, last
+
+    def run(self, n_steps: int, fail_hook: Optional[Callable[[int], None]] = None):
+        """fail_hook(step) may raise to simulate a node failure (tests)."""
+        state, start = self._restore_or_init()
+        metrics_log = []
+        step = start
+        retries = 0
+        while step < n_steps:
+            try:
+                if fail_hook is not None:
+                    fail_hook(step)
+                batch = self.data_at(step)
+                state, metrics = self.step_fn(state, batch)
+                metrics = jax.tree_util.tree_map(np.asarray, metrics)
+                metrics_log.append((step, metrics))
+                step += 1
+                retries = 0
+                if step % self.cfg.ckpt_every == 0 or step == n_steps:
+                    store.save(self.cfg.ckpt_dir, step, state)
+                    self._gc()
+            except Exception:
+                retries += 1
+                if retries > self.cfg.max_retries:
+                    raise
+                log.exception("step %d failed; retry %d", step, retries)
+                state, step = self._restore_or_init()
+        return state, metrics_log
+
+    def _gc(self):
+        import os
+        import shutil
+
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.cfg.ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.cfg.keep_last]:
+            shutil.rmtree(
+                os.path.join(self.cfg.ckpt_dir, f"step_{s:08d}"), ignore_errors=True
+            )

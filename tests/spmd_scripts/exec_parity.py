@@ -1,0 +1,178 @@
+"""SPMD executor parity test: runs inside a subprocess with fake devices.
+
+Usage: python exec_parity.py <schedule> <p> <m> <n_chunks>
+
+Builds a toy deep-MLP pipeline model, runs the ticked executor on a
+(p,)-device mesh, and checks loss + all gradients against a single-device
+reference (same math, no pipeline).  Prints OK on success.
+"""
+
+import os
+import sys
+
+SCHED, P_, M_, C_ = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.executor import PipelineExecutor, PipelineProgram
+from repro.core.passes import auto_fbw
+from repro.core.schedules import (
+    compile_plan,
+    gpipe,
+    interleaved_1f1b,
+    one_f_one_b,
+    zb_h1,
+    zb_h2,
+    zb_v,
+)
+
+D = 8  # hidden
+B = 2  # microbatch size
+jax.config.update("jax_enable_x64", True)
+DT = jnp.float64
+
+
+def layer_fn(p, x, side):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+
+def make_layer_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": (jax.random.normal(k1, (D, D)) * 0.5).astype(DT),
+        "b": (jax.random.normal(k2, (D,)) * 0.1).astype(DT),
+    }
+
+
+def sink_fn(shared, y, side):
+    pred = y @ shared["w_out"]
+    return jnp.sum((pred - side["target"]) ** 2) / M_
+
+
+def src_fwd(shared, side_mb):
+    return side_mb["x0"] @ shared["w_in"]
+
+
+def src_bwd_w(shared, side_mb, dx):
+    return {
+        "w_in": side_mb["x0"].T @ dx,
+        "w_out": jnp.zeros_like(shared["w_out"]),
+    }
+
+
+def main():
+    sched = {
+        "1f1b": lambda: one_f_one_b(P_, M_),
+        "gpipe": lambda: gpipe(P_, M_),
+        "zb-h1": lambda: zb_h1(P_, M_),
+        "zb-h2": lambda: zb_h2(P_, M_),
+        "zb-v": lambda: zb_v(P_, M_),
+        "interleaved": lambda: interleaved_1f1b(P_, M_, v=C_),
+    }[SCHED]()
+    plan = compile_plan(sched)
+    C = plan.n_chunks
+    pl = sched.placement
+
+    key = jax.random.PRNGKey(0)
+    # distinct params per (stage, chunk)
+    keys = jax.random.split(key, P_ * C + 3)
+    stage_chunk_params = {
+        (s, c): make_layer_params(keys[s * C + c])
+        for s in range(P_)
+        for c in range(C)
+    }
+    shared = {
+        "w_in": (jax.random.normal(keys[-1], (D, D)) * 0.5).astype(DT),
+        "w_out": (jax.random.normal(keys[-2], (D, D)) * 0.5).astype(DT),
+    }
+    side = {
+        "x0": jax.random.normal(keys[-3], (M_, B, D)).astype(DT),
+        "target": jax.random.normal(jax.random.PRNGKey(7), (M_, B, D)).astype(DT),
+    }
+
+    # ---------------- reference (no pipeline) ---------------------------- #
+    def ref_loss(all_params, shared):
+        total = 0.0
+        for j in range(M_):
+            x = side["x0"][j] @ shared["w_in"]
+            for c in range(C):
+                for k in range(P_):
+                    s = pl.stage_of(c, k)
+                    x = layer_fn(all_params[(s, c)], x, None)
+            total = total + jnp.sum((x @ shared["w_out"] - side["target"][j]) ** 2) / M_
+        return total
+
+    ref_l, ref_grads = jax.value_and_grad(ref_loss, argnums=(0, 1))(
+        stage_chunk_params, shared
+    )
+
+    # ---------------- pipelined ------------------------------------------ #
+    program = PipelineProgram(
+        chunks=[auto_fbw(layer_fn, name=f"chunk{c}") for c in range(C)],
+        src_fwd=src_fwd,
+        src_bwd_w=src_bwd_w,
+        sink=auto_fbw(sink_fn, name="sink"),
+        act_shape=(B, D),
+        act_dtype=DT,
+    )
+    execu = PipelineExecutor(program, plan, pipe_axis="pipe")
+    grad_fn = execu.build_grad_fn()
+
+    mesh = jax.make_mesh((P_,), ("pipe",))
+    # stack params: per chunk, leaves (p, ...)
+    stacked = tuple(
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[stage_chunk_params[(s, c)] for s in range(P_)],
+        )
+        for c in range(C)
+    )
+
+    def body(stacked_local, shared, side):
+        local = tuple(
+            jax.tree_util.tree_map(lambda a: a[0], sp) for sp in stacked_local
+        )
+        grads, shared_grads, loss = grad_fn(local, shared, side)
+        grads = tuple(
+            jax.tree_util.tree_map(lambda a: a[None], g) for g in grads
+        )
+        return grads, shared_grads, loss
+
+    spec_stacked = tuple(
+        jax.tree_util.tree_map(lambda _: P("pipe"), sp) for sp in stacked
+    )
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_stacked, P(), P()),
+        out_specs=(spec_stacked, P(), P()),
+        check_rep=False,
+    )
+    grads, shared_grads, loss = jax.jit(fn)(stacked, shared, side)
+
+    # ---------------- compare -------------------------------------------- #
+    np.testing.assert_allclose(loss, ref_l, rtol=1e-9, atol=1e-9)
+    for c in range(C):
+        for s in range(P_):
+            for k in ("w", "b"):
+                got = grads[c][k][s]
+                want = ref_grads[0][(s, c)][k]
+                np.testing.assert_allclose(
+                    got, want, rtol=1e-8, atol=1e-9,
+                    err_msg=f"grad mismatch stage={s} chunk={c} {k}",
+                )
+    for k in ("w_in", "w_out"):
+        np.testing.assert_allclose(
+            shared_grads[k], ref_grads[1][k], rtol=1e-8, atol=1e-9,
+            err_msg=f"shared grad {k}",
+        )
+    print("OK", SCHED, P_, M_, C_, float(loss))
+
+
+if __name__ == "__main__":
+    main()

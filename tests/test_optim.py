@@ -1,0 +1,157 @@
+"""AdamW rollback + post-validation semantics (paper Sec. 4, App. C/E)."""
+
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import adamw, postval
+
+
+def _params(seed, shapes=((4, 4), (8,))):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(k, s) for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+CFG = adamw.AdamWConfig(lr=3e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0)
+
+
+def test_step_then_rollback_is_identity():
+    params = _params(0)
+    grads = _params(1)
+    state = adamw.init(params)
+    # warm the state so t > 0 and moments are nontrivial
+    for i in range(3):
+        params, state = adamw.step(params, state, _params(10 + i), CFG)
+    p1, s1 = adamw.step(params, state, grads, CFG)
+    p0, s0 = adamw.rollback(p1, s1, grads, CFG)
+    for k in params:
+        np.testing.assert_allclose(p0[k], params[k], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(s0.m[k], state.m[k], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(s0.v[k], state.v[k], rtol=1e-5, atol=1e-6)
+    assert int(s0.t) == int(state.t)
+
+
+@given(seed=st.integers(0, 50), lr=st.sampled_from([1e-4, 1e-3, 1e-2]))
+@settings(max_examples=20, deadline=None)
+def test_property_rollback_inverse(seed, lr):
+    cfg = adamw.AdamWConfig(lr=lr, weight_decay=0.05, grad_clip=None)
+    params = _params(seed)
+    grads = _params(seed + 1)
+    state = adamw.init(params)
+    params, state = adamw.step(params, state, _params(seed + 2), cfg)
+    p1, s1 = adamw.step(params, state, grads, cfg)
+    p0, s0 = adamw.rollback(p1, s1, grads, cfg)
+    for k in params:
+        np.testing.assert_allclose(p0[k], params[k], rtol=1e-4, atol=1e-5)
+
+
+def _run_both(grads_scale, inject_nan, seed=0):
+    """Run sync reference vs optimistic+validate; return both param trees."""
+    params = _params(seed)
+    grads = jax.tree_util.tree_map(lambda g: g * grads_scale, _params(seed + 1))
+    if inject_nan:
+        grads["p0"] = grads["p0"].at[0, 0].set(jnp.nan)
+    state = adamw.init(params)
+
+    # reference: blocking global decision
+    ref_p, ref_s = postval.sync_step(params, state, grads, CFG)
+
+    # post-validation: optimistic on partial stats, then validate with full.
+    # Emulate a 2-stage pipe: this stage sees only half the sumsq initially.
+    full = postval.local_stats(grads)
+    partial = postval.GradStats(full.sumsq * 0.5, full.nonfinite)
+    p1, s1, dec = postval.optimistic_step(params, state, grads, partial, CFG)
+    p2, s2, amended = postval.validate_and_fix(p1, s1, grads, dec, full, CFG)
+    return ref_p, p2, amended
+
+
+def test_postval_matches_sync_no_clip():
+    ref, got, amended = _run_both(grads_scale=0.05, inject_nan=False)
+    assert not bool(amended)  # speculation was correct
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-6, atol=1e-7)
+
+
+def test_postval_matches_sync_clipped():
+    ref, got, amended = _run_both(grads_scale=50.0, inject_nan=False)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-4, atol=1e-5)
+
+
+def test_postval_matches_sync_nan_skip():
+    ref, got, amended = _run_both(grads_scale=1.0, inject_nan=True)
+    assert not bool(amended)  # partial already saw the NaN -> skipped, legit
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k])
+
+
+def test_postval_borderline_partial_ok_global_clip():
+    """Partial norm under threshold, global norm over: rollback + redo."""
+    params = _params(0)
+    grads = jax.tree_util.tree_map(lambda g: g * 1.0, _params(1))
+    state = adamw.init(params)
+    full = postval.local_stats(grads)
+    # force: partial passes, global clips
+    partial = postval.GradStats(jnp.float32(0.25 * CFG.grad_clip**2), full.nonfinite)
+    full_big = postval.GradStats(jnp.float32(9.0 * CFG.grad_clip**2), full.nonfinite)
+    p1, s1, dec = postval.optimistic_step(params, state, grads, partial, CFG)
+    p2, s2, amended = postval.validate_and_fix(p1, s1, grads, dec, full_big, CFG)
+    assert bool(amended)
+    want = postval.decide_global(full_big, CFG)
+    ref_p, ref_s = adamw.step(params, state, grads, CFG, scale=want.scale)
+    for k in params:
+        np.testing.assert_allclose(p2[k], ref_p[k], rtol=1e-4, atol=1e-5)
+
+
+_SPMD_PREFIX_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.optim import postval
+
+mesh = jax.make_mesh((8,), ("pipe",))
+x = jnp.arange(1.0, 9.0)  # per-stage sumsq
+bad = jnp.zeros((8,), bool).at[5].set(True)
+
+def body(sq, nf):
+    stats = postval.GradStats(sq[0], nf[0])
+    partial, full = postval.pipe_prefix_stats(stats, "pipe")
+    return (partial.sumsq[None], partial.nonfinite[None],
+            full.sumsq[None], full.nonfinite[None])
+
+fn = shard_map(body, mesh=mesh, in_specs=(P("pipe"), P("pipe")),
+               out_specs=(P("pipe"), P("pipe"), P("pipe"), P("pipe")))
+psq, pbad, fsq, fbad = jax.jit(fn)(x, bad)
+np.testing.assert_allclose(psq, np.cumsum(np.arange(1.0, 9.0)))
+assert list(pbad) == [False]*5 + [True]*3
+np.testing.assert_allclose(fsq, np.full(8, 36.0))
+assert all(fbad)
+print("OK")
+"""
+
+
+def test_pipe_prefix_stats_spmd():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _SPMD_PREFIX_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

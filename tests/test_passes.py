@@ -1,0 +1,176 @@
+"""F/B/W split correctness: auto_fbw and SequentialFBW vs jax.grad."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.passes import SequentialFBW, auto_fbw
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _mlp_layer(p, x, side):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _mlp_params(key, d_in, d_hid, d_out):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d_in, d_hid)) * 0.1,
+        "b1": jnp.zeros((d_hid,)),
+        "w2": jax.random.normal(k2, (d_hid, d_out)) * 0.1,
+        "b2": jnp.zeros((d_out,)),
+    }
+
+
+def test_auto_fbw_matches_jax_grad():
+    key = jax.random.PRNGKey(0)
+    params = _mlp_params(key, 6, 16, 6)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 6))
+    side = {}
+    mod = auto_fbw(_mlp_layer, name="mlp")
+    y, res = mod.fwd(params, x, side)
+    dy = jax.random.normal(jax.random.PRNGKey(2), y.shape)
+    dx, wctx = mod.bwd_x(params, res, dy, side)
+    grads = mod.bwd_w(params, res, wctx, side)
+
+    ref_grads, ref_dx = jax.vjp(lambda p, xx: _mlp_layer(p, xx, side), params, x)[
+        1
+    ](dy)
+    np.testing.assert_allclose(dx, ref_dx, rtol=1e-6, atol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(grads[k], ref_grads[k], rtol=1e-6, atol=1e-6)
+
+
+def test_auto_fbw_param_leaves_not_stored():
+    """Weights must not be duplicated into the residual buffers."""
+    params = _mlp_params(jax.random.PRNGKey(0), 8, 32, 8)
+    x = jnp.ones((2, 8))
+    mod = auto_fbw(_mlp_layer, name="mlp")
+    _, res = jax.jit(lambda p, xx: mod.fwd(p, xx, {}))(params, x)
+    param_bytes = {v.shape for v in jax.tree_util.tree_leaves(params)}
+    for leaf in res:
+        assert leaf.shape not in {(8, 32), (32, 8)}, "weight stored in residuals"
+
+
+def test_auto_fbw_side_inputs_reinjected():
+    def f(p, x, side):
+        return (x + side["bias"]) @ p["w"]
+
+    params = {"w": jnp.eye(4)}
+    side = {"bias": jnp.arange(4.0)}
+    mod = auto_fbw(f)
+    y, res = mod.fwd(params, jnp.ones((2, 4)), side)
+    dx, wctx = mod.bwd_x(params, res, jnp.ones_like(y), side)
+    grads = mod.bwd_w(params, res, wctx, side)
+    np.testing.assert_allclose(dx, jnp.ones((2, 4)) @ params["w"].T)
+    np.testing.assert_allclose(grads["w"], ((jnp.ones((2, 4)) + side["bias"]).T) @ jnp.ones((2, 4)))
+
+
+def test_dce_split_flops():
+    """B must not pay for the dW matmuls and vice versa (paper Table 1)."""
+    d = 64
+    params = {"w": jnp.ones((d, d))}
+
+    def f(p, x, side):
+        return x @ p["w"]
+
+    mod = auto_fbw(f)
+    x = jnp.ones((8, d))
+    _, res = mod.fwd(params, x, {})
+    dy = jnp.ones((8, d))
+
+    def b_only(p, r, g):
+        dx, _ = mod.bwd_x(p, r, g, {})
+        return dx
+
+    def w_only(p, r, g):
+        return mod.bwd_w(p, r, g, {})
+
+    def both(p, r, g):
+        dx, wctx = mod.bwd_x(p, r, g, {})
+        return dx, mod.bwd_w(p, r, wctx, {})
+
+    fb = jax.jit(b_only).lower(params, res, dy).compile().cost_analysis()["flops"]
+    fw = jax.jit(w_only).lower(params, res, dy).compile().cost_analysis()["flops"]
+    fboth = jax.jit(both).lower(params, res, dy).compile().cost_analysis()["flops"]
+    matmul = 2 * 8 * d * d
+    assert fb == pytest.approx(matmul, rel=0.05)
+    assert fw == pytest.approx(matmul, rel=0.05)
+    assert fboth == pytest.approx(2 * matmul, rel=0.05)
+
+
+def test_sequential_fbw_matches_jax_grad():
+    key = jax.random.PRNGKey(0)
+    mods = [auto_fbw(_mlp_layer, name=f"mlp{i}") for i in range(3)]
+    seq = SequentialFBW(mods)
+    params = tuple(_mlp_params(jax.random.PRNGKey(i), 6, 12, 6) for i in range(3))
+    x = jax.random.normal(key, (4, 6))
+    y, res = seq.fwd(params, x, {})
+    dy = jnp.ones_like(y)
+    dx, wctx = seq.bwd_x(params, res, dy, {})
+    grads = seq.bwd_w(params, res, wctx, {})
+
+    def full(p, xx):
+        out = xx
+        for pi in p:
+            out = _mlp_layer(pi, out, {})
+        return out
+
+    ref_grads, ref_dx = jax.vjp(full, params, x)[1](dy)
+    np.testing.assert_allclose(dx, ref_dx, rtol=1e-5, atol=1e-6)
+    for g, rg in zip(grads, ref_grads):
+        for k in g:
+            np.testing.assert_allclose(g[k], rg[k], rtol=1e-5, atol=1e-6)
+
+
+def test_cross_jit_boundaries():
+    """F, B, W traced in separate jit programs (as the executor does)."""
+    params = _mlp_params(jax.random.PRNGKey(0), 4, 8, 4)
+    x = jnp.ones((2, 4))
+    mod = auto_fbw(_mlp_layer)
+    mod.ensure_traced(params, x, {})
+    y, res = jax.jit(lambda p, xx: mod.fwd(p, xx, {}))(params, x)
+    dy = jnp.ones_like(y)
+    dx, wctx = jax.jit(lambda p, r, g: mod.bwd_x(p, r, g, {}))(params, res, dy)
+    grads = jax.jit(lambda p, r, w: mod.bwd_w(p, r, w, {}))(params, res, wctx)
+    ref = jax.grad(lambda p: _mlp_layer(p, x, {}).sum())(params)
+    for k in params:
+        np.testing.assert_allclose(grads[k], ref[k], rtol=1e-5, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 4),
+    d=st.sampled_from([3, 8]),
+    depth=st.integers(1, 3),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=15, deadline=None)
+def test_property_split_equals_fused(b, d, depth, seed):
+    mods = [auto_fbw(_mlp_layer, name=f"m{i}") for i in range(depth)]
+    seq = SequentialFBW(mods)
+    params = tuple(
+        _mlp_params(jax.random.PRNGKey(seed + i), d, 2 * d, d) for i in range(depth)
+    )
+    x = jax.random.normal(jax.random.PRNGKey(seed + 99), (b, d))
+    y, res = seq.fwd(params, x, {})
+    dy = jax.random.normal(jax.random.PRNGKey(seed + 100), y.shape)
+    dx, wctx = seq.bwd_x(params, res, dy, {})
+    grads = seq.bwd_w(params, res, wctx, {})
+
+    def full(p, xx):
+        out = xx
+        for pi in p:
+            out = _mlp_layer(pi, out, {})
+        return out
+
+    ref_grads, ref_dx = jax.vjp(full, params, x)[1](dy)
+    np.testing.assert_allclose(dx, ref_dx, rtol=2e-5, atol=1e-5)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_r = jax.tree_util.tree_leaves(ref_grads)
+    for g, rg in zip(flat_g, flat_r):
+        np.testing.assert_allclose(g, rg, rtol=2e-5, atol=1e-5)
