@@ -1,0 +1,104 @@
+"""Memory-vs-throughput frontier sweep (controllable-memory subsystem).
+
+For each config, build a :class:`MemoryBudgetPlanner` and sweep an ascending
+per-device byte budget from just below the cheapest plan to comfortably above
+the hungriest one.  At every point record the planner's decision; the
+resulting cost-vs-budget curve must be monotone (more memory never yields a
+slower plan -- guaranteed by the planner's cumulative candidate pool and
+asserted here).
+
+Writes ``BENCH_memory_frontier.json``:
+
+  {config: {"m_b_bytes": ..., "points": [
+      {"budget_bytes", "feasible", "schedule", "cost", "bubble_rate",
+       "total_bytes", "min_required_bytes"}, ...]}}
+
+Usage: python benchmarks/memory_frontier.py [--configs a,b,c] [--points N]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core.memory import MemoryBudgetPlanner
+from repro.core.simulator import TimeModel
+
+DEFAULT_CONFIGS = ["gpt3_1_5b", "gpt3_6_2b", "gemma2_2b"]
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_memory_frontier.json")
+
+
+def sweep(arch: str, p: int, m: int, microbatch: int, seq_len: int, n_points: int):
+    cfg = get_config(arch)
+    planner = MemoryBudgetPlanner(
+        cfg, p=p, m=m, microbatch=microbatch, seq_len=seq_len,
+        times=TimeModel.unit(),
+    )
+    # anchor the sweep on the static family's footprints
+    totals = sorted(
+        c.total_bytes for c in planner.candidates() if c.schedule is not None
+    )
+    lo, hi = 0.5 * totals[0], 1.25 * totals[-1]
+    span = max(1, n_points - 1)
+    budgets = [lo + (hi - lo) * i / span for i in range(n_points)]
+    points = []
+    prev_cost = None
+    for b in budgets:  # ascending: planner pool is cumulative
+        d = planner.plan(b)
+        points.append(
+            {
+                "budget_bytes": b,
+                "feasible": d.feasible,
+                "schedule": d.chosen.name if d.feasible else None,
+                "cost": d.chosen.cost if d.feasible else None,
+                "bubble_rate": d.chosen.bubble_rate if d.feasible else None,
+                "total_bytes": d.chosen.total_bytes if d.feasible else None,
+                "min_required_bytes": d.min_required_bytes,
+            }
+        )
+        print(f"  {arch}: {d.summary()}")
+        if d.feasible:
+            if prev_cost is not None and d.chosen.cost > prev_cost + 1e-6:
+                raise AssertionError(
+                    f"{arch}: cost went UP with budget "
+                    f"({prev_cost} -> {d.chosen.cost} at {b/2**20:.0f} MiB)"
+                )
+            prev_cost = d.chosen.cost
+    return {
+        "p": p,
+        "m": m,
+        "microbatch": microbatch,
+        "seq_len": seq_len,
+        "m_b_bytes": planner.bytes_1c.m_b_bytes,
+        "points": points,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS))
+    ap.add_argument("--points", type=int, default=8)
+    ap.add_argument("--p", type=int, default=6)
+    ap.add_argument("--m", type=int, default=12)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--seq-len", type=int, default=4096)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    result = {}
+    for arch in args.configs.split(","):
+        arch = arch.strip()
+        print(f"== {arch} ==")
+        result[arch] = sweep(
+            arch, args.p, args.m, args.microbatch, args.seq_len, args.points
+        )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -106,6 +106,8 @@ def _cost_of(fn, mesh, in_specs, out_specs, args) -> PassCost:
     lowered = wrapped.lower(*args)
     compiled = lowered.compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # one dict per device program
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     tp = mesh.devices.size
     return PassCost(

@@ -235,7 +235,7 @@ class PipelineExecutor:
             S_act = max(plan.n_act_slots)
             S_grad = max(plan.n_grad_slots)
             if self.shard_channels:
-                tp_size = jax.lax.axis_size(self.tp_axis)
+                tp_size = jax.lax.psum(1, self.tp_axis)
                 assert prog.act_shape[1] % tp_size == 0, (
                     f"seq {prog.act_shape[1]} must divide tp={tp_size} for"
                     " sequence-sharded channels"

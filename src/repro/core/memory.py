@@ -1,0 +1,449 @@
+"""Time-resolved pipeline memory model and the byte-level budget planner.
+
+Three layers (DESIGN.md Sec. 5):
+
+1. :func:`memory_timeline` -- the simulator-backed refinement of
+   ``Schedule.memory_profile``: instead of walking op *counts*, it runs the
+   discrete-event simulator and tracks the live buffers per stage over
+   simulated time, separately for
+
+     * **activations** (the paper's M_B term): allocated when F starts,
+       freed when the matching B ends;
+     * **W-contexts** (M_W, the kept cotangents of a split backward):
+       allocated when B starts, freed when the matching W ends.
+
+   Peaks match the op-count profile when ops never overlap idle time, but
+   the timeline also yields *when* the peak happens and the global
+   (cross-stage) footprint at any instant.
+
+2. :class:`ActivationByteModel` -- converts (M_B, M_W) units into device
+   bytes for a concrete :class:`~repro.models.lm.ArchConfig` and run shape
+   (microbatch, seq_len, pipeline layout).  Per-layer stored-activation
+   bytes are derived from the block kinds (attention / MLP / MoE / recurrent)
+   so the same schedule is costed differently for e.g. gemma2 (d_ff = 4x)
+   and a recurrent arch.
+
+3. :class:`MemoryBudgetPlanner` -- given a config and a per-device byte
+   budget, simulates the whole schedule family {1F1B, interleaved 1F1B,
+   ZB-H1, ZB-H2, ZB-V, V-Half, V-Min, memory-limited auto-search} and
+   returns the fastest plan whose modeled bytes fit, or an explicit
+   infeasibility report with the minimum budget that would fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .schedules.ir import Op, OpKind, Schedule
+from .simulator import TimeModel, simulate
+
+__all__ = [
+    "MemoryTimeline",
+    "memory_timeline",
+    "ActivationByteModel",
+    "CandidatePlan",
+    "PlannerDecision",
+    "MemoryBudgetPlanner",
+]
+
+
+# --------------------------------------------------------------------- #
+# 1. time-resolved memory
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class MemoryTimeline:
+    """Per-stage piecewise-constant memory over simulated time.
+
+    ``events[s]`` is a sorted list of (time, act, wctx) samples taken after
+    every change; ``peak_*`` are per-stage maxima in M_B units.
+    """
+
+    p: int
+    m_b: float
+    m_w: float
+    events: List[List[Tuple[float, float, float]]]
+    peak_act: np.ndarray  # (p,)
+    peak_wctx: np.ndarray  # (p,)
+    peak_total: np.ndarray  # (p,)
+
+    @property
+    def max_peak_act(self) -> float:
+        return float(self.peak_act.max())
+
+    @property
+    def max_peak_total(self) -> float:
+        return float(self.peak_total.max())
+
+    def global_footprint(self, t: float) -> float:
+        """Sum of all stages' live memory at time t (bytes == units * m_b)."""
+        total = 0.0
+        for stage_events in self.events:
+            live = 0.0
+            for ts, act, wctx in stage_events:
+                if ts > t:
+                    break
+                live = act + wctx
+            total += live
+        return total
+
+
+def memory_timeline(
+    schedule: Schedule,
+    times: Optional[TimeModel] = None,
+    m_b: float = 1.0,
+    m_w: float = 0.5,
+) -> MemoryTimeline:
+    """Track live activation / W-context buffers over simulated time.
+
+    Conservative edges: allocations happen at op *start*, frees at op *end*
+    (an activation is still resident while its B runs; the W-context is
+    resident while its W runs).
+    """
+    times = times or TimeModel.unit()
+    res = simulate(schedule, times)
+    C = schedule.n_chunks
+    mb_c, mw_c = m_b / C, m_w / C
+
+    p = schedule.p
+    events: List[List[Tuple[float, float, float]]] = []
+    peak_act = np.zeros(p)
+    peak_wctx = np.zeros(p)
+    peak_total = np.zeros(p)
+    for s in range(p):
+        deltas: List[Tuple[float, int, float, float]] = []  # (t, order, d_act, d_wctx)
+        for op in schedule.stage_ops[s]:
+            t0, t1 = res.start[(s, op)], res.end[(s, op)]
+            if op.kind == OpKind.F:
+                deltas.append((t0, 0, mb_c, 0.0))
+            elif op.kind == OpKind.B:
+                deltas.append((t0, 0, 0.0, mw_c))
+                deltas.append((t1, 1, -mb_c, 0.0))
+            else:
+                deltas.append((t1, 1, 0.0, -mw_c))
+        deltas.sort(key=lambda d: (d[0], d[1]))
+        act = wctx = 0.0
+        series: List[Tuple[float, float, float]] = []
+        for t, _, da, dw in deltas:
+            act += da
+            wctx += dw
+            series.append((t, act, wctx))
+            peak_act[s] = max(peak_act[s], act)
+            peak_wctx[s] = max(peak_wctx[s], wctx)
+            peak_total[s] = max(peak_total[s], act + wctx)
+        events.append(series)
+    return MemoryTimeline(
+        p=p,
+        m_b=m_b,
+        m_w=m_w,
+        events=events,
+        peak_act=peak_act,
+        peak_wctx=peak_wctx,
+        peak_total=peak_total,
+    )
+
+
+# --------------------------------------------------------------------- #
+# 2. activation byte model
+# --------------------------------------------------------------------- #
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationByteModel:
+    """Bytes behind one (M_B, M_W) unit for a concrete config + run shape.
+
+    ``m_b_bytes`` is the stored-activation footprint of one microbatch
+    through one *full stage* (all its layers, all chunks); ``m_w_bytes`` the
+    matching B->W context.  Derivation (DESIGN.md Sec. 5): per token each
+    block kind stores
+
+      * attention-like (attn/attn_local/mla): inputs + projections
+        ~ (4*d_model + 2*kv) where kv = n_kv_heads * head_dim,
+      * MLP-like (mlp/moe): input + hidden ~ (d_model + 2*d_ff')
+        with d_ff' the *activated* expert width for MoE,
+      * recurrent (slstm/mlstm/rglru/encdec): state + gates ~ 6*d_model;
+
+    the W context keeps only the weight-grad inputs (~d_model per projection
+    plus the MLP hidden), empirically ~40% of M_B for transformer blocks.
+    """
+
+    m_b_bytes: float
+    m_w_bytes: float
+    per_layer_act: float
+    per_layer_wctx: float
+    layers_per_stage: int
+    tokens: int
+    dtype_bytes: int
+
+    @staticmethod
+    def from_config(
+        cfg,
+        microbatch: int,
+        seq_len: int,
+        p: int,
+        n_chunks: int = 1,
+        tp_size: int = 1,
+    ) -> "ActivationByteModel":
+        dtype_bytes = _DTYPE_BYTES.get(cfg.dtype, 4)
+        ex = cfg.extras_dict()
+        head_dim = cfg.head_dim or (cfg.d_model // cfg.n_heads)
+        kv = cfg.n_kv_heads * head_dim
+        d_ff_act = cfg.d_ff
+        if "n_active_experts" in ex and "n_experts" in ex:
+            d_ff_act = cfg.d_ff * ex["n_active_experts"]
+
+        act_per_kind = {}
+        wctx_per_kind = {}
+        for kinds in cfg.block_pattern:
+            for kind in kinds:
+                if kind.startswith("attn") or kind == "mla":
+                    act_per_kind[kind] = 4 * cfg.d_model + 2 * kv
+                    wctx_per_kind[kind] = 2 * cfg.d_model
+                elif kind in ("mlp", "moe"):
+                    act_per_kind[kind] = cfg.d_model + 2 * d_ff_act
+                    wctx_per_kind[kind] = cfg.d_model + d_ff_act
+                else:  # recurrent / state-space / frontier kinds
+                    act_per_kind[kind] = 6 * cfg.d_model
+                    wctx_per_kind[kind] = 2 * cfg.d_model
+
+        period = len(cfg.block_pattern)
+        per_block_act = sum(
+            act_per_kind[k] for kinds in cfg.block_pattern for k in kinds
+        ) / period
+        per_block_wctx = sum(
+            wctx_per_kind[k] for kinds in cfg.block_pattern for k in kinds
+        ) / period
+
+        g = max(1, math.ceil(cfg.n_layers / (p * n_chunks))) * n_chunks
+        tokens = microbatch * seq_len
+        per_layer_act = per_block_act * tokens * dtype_bytes / max(1, tp_size)
+        per_layer_wctx = per_block_wctx * tokens * dtype_bytes / max(1, tp_size)
+        return ActivationByteModel(
+            m_b_bytes=per_layer_act * g,
+            m_w_bytes=per_layer_wctx * g,
+            per_layer_act=per_layer_act,
+            per_layer_wctx=per_layer_wctx,
+            layers_per_stage=g,
+            tokens=tokens,
+            dtype_bytes=dtype_bytes,
+        )
+
+    def timeline_bytes(self, tl: "MemoryTimeline") -> Tuple[float, float, float]:
+        """(act_bytes, wctx_bytes, total_bytes) peaks of a unit timeline."""
+        act = float(tl.peak_act.max()) * self.m_b_bytes
+        wctx = float(tl.peak_wctx.max()) * self.m_w_bytes
+        total = float(
+            max(
+                a * self.m_b_bytes + w * self.m_w_bytes
+                for series in tl.events
+                for _, a, w in series
+            )
+        )
+        return act, wctx, total
+
+    def schedule_bytes(
+        self, schedule: Schedule, times: Optional[TimeModel] = None
+    ) -> Tuple[float, float, float]:
+        """(act_bytes, wctx_bytes, total_bytes) peak per device."""
+        return self.timeline_bytes(memory_timeline(schedule, times, m_b=1.0, m_w=1.0))
+
+
+# --------------------------------------------------------------------- #
+# 3. budget planner
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class CandidatePlan:
+    name: str
+    schedule: Optional[Schedule]
+    cost: float
+    bubble_rate: float
+    peak_act_units: float  # M_B units
+    peak_wctx_units: float
+    act_bytes: float
+    wctx_bytes: float
+    total_bytes: float
+    feasible: bool
+    note: str = ""
+
+
+@dataclasses.dataclass
+class PlannerDecision:
+    budget_bytes: float
+    feasible: bool
+    chosen: Optional[CandidatePlan]
+    candidates: List[CandidatePlan]
+    min_required_bytes: float  # smallest candidate footprint
+
+    def summary(self) -> str:
+        if self.feasible:
+            c = self.chosen
+            return (
+                f"budget {self.budget_bytes/2**20:.0f} MiB -> {c.name} "
+                f"(cost {c.cost:.1f}, bubble {c.bubble_rate:.3f}, "
+                f"{c.total_bytes/2**20:.0f} MiB)"
+            )
+        return (
+            f"budget {self.budget_bytes/2**20:.0f} MiB infeasible; "
+            f"cheapest plan needs {self.min_required_bytes/2**20:.0f} MiB"
+        )
+
+
+class MemoryBudgetPlanner:
+    """Pick the fastest schedule whose modeled schedule memory fits a budget.
+
+    Feasibility is judged on the *total* schedule footprint -- peak of live
+    activation plus W-context bytes -- not activations alone.
+
+    The candidate family covers the whole memory/throughput frontier: 1F1B
+    (p * M_B, fused backward), interleaved 1F1B, ZB-H1 (p * M_B, split),
+    ZB-H2 (~2p * M_B, zero bubble), ZB-V (p * M_B, zero bubble at unit
+    times), V-Half (~p/2), V-Min (~p/3), and the Sec.-3.1 auto-search run
+    at the budget-implied memory limit.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        p: int,
+        m: int,
+        microbatch: int,
+        seq_len: int,
+        times: Optional[TimeModel] = None,
+        tp_size: int = 1,
+    ):
+        self.cfg = cfg
+        self.p = p
+        self.m = m
+        self.times = times or TimeModel.unit()
+        self.bytes_1c = ActivationByteModel.from_config(
+            cfg, microbatch, seq_len, p, n_chunks=1, tp_size=tp_size
+        )
+        self.bytes_2c = ActivationByteModel.from_config(
+            cfg, microbatch, seq_len, p, n_chunks=2, tp_size=tp_size
+        )
+        self._candidates: Optional[List[CandidatePlan]] = None
+        # auto-search results keyed by rounded memory limit; cumulative, so an
+        # ascending budget sweep keeps every cheaper plan in the pool and the
+        # cost-vs-budget frontier stays monotone.
+        self._auto_cache: Dict[float, CandidatePlan] = {}
+
+    # ------------------------------------------------------------------ #
+    def _evaluate(self, name, build, byte_model, grouped_w=False, note=""):
+        try:
+            sched = build()
+        except (ValueError, RuntimeError) as e:
+            return CandidatePlan(
+                name, None, float("inf"), 1.0, float("inf"), float("inf"),
+                float("inf"), float("inf"), float("inf"), False,
+                note=f"build failed: {e}",
+            )
+        times = (
+            dataclasses.replace(self.times, grouped_w=True)
+            if grouped_w
+            else self.times
+        )
+        res = simulate(sched, times)
+        tl = memory_timeline(sched, times, m_b=1.0, m_w=1.0)
+        act_u = float(tl.peak_act.max())
+        wctx_u = float(tl.peak_wctx.max())
+        act_b, wctx_b, total_b = byte_model.timeline_bytes(tl)
+        return CandidatePlan(
+            name=name,
+            schedule=sched,
+            cost=res.cost,
+            bubble_rate=res.bubble_rate,
+            peak_act_units=act_u,
+            peak_wctx_units=wctx_u,
+            act_bytes=act_b,
+            wctx_bytes=wctx_b,
+            total_bytes=total_b,
+            feasible=True,  # byte-feasibility decided against a budget later
+            note=note,
+        )
+
+    def candidates(self, budget_bytes: Optional[float] = None) -> List[CandidatePlan]:
+        """Evaluate the full family (cached), plus a budget-tuned auto search."""
+        from .schedules import (
+            interleaved_1f1b,
+            one_f_one_b,
+            search,
+            v_half,
+            v_min,
+            zb_h1,
+            zb_h2,
+            zb_v,
+        )
+
+        p, m = self.p, self.m
+        if self._candidates is None:
+            cands = [
+                self._evaluate(
+                    "1f1b", lambda: one_f_one_b(p, m), self.bytes_1c,
+                    grouped_w=True, note="fused backward",
+                ),
+                self._evaluate("zb-h1", lambda: zb_h1(p, m), self.bytes_1c),
+                self._evaluate("zb-h2", lambda: zb_h2(p, m), self.bytes_1c),
+                self._evaluate(
+                    "zb-v", lambda: zb_v(p, m, times=self.times), self.bytes_2c
+                ),
+                self._evaluate(
+                    "v-half", lambda: v_half(p, m, times=self.times), self.bytes_2c
+                ),
+                self._evaluate(
+                    "v-min", lambda: v_min(p, m, times=self.times), self.bytes_2c
+                ),
+            ]
+            if m % p == 0:
+                cands.append(
+                    self._evaluate(
+                        "1f1b-interleaved",
+                        lambda: interleaved_1f1b(p, m, v=2),
+                        self.bytes_2c,
+                        grouped_w=True,
+                        note="fused backward",
+                    )
+                )
+            self._candidates = cands
+        if budget_bytes is not None and self.bytes_1c.m_b_bytes > 0:
+            limit_units = round(budget_bytes / self.bytes_1c.m_b_bytes, 1)
+            if limit_units >= 1.0 and limit_units not in self._auto_cache:
+                self._auto_cache[limit_units] = self._evaluate(
+                    f"zb-auto@{limit_units:.1f}Mb",
+                    lambda: search(p, m, self.times, m_limit=limit_units).schedule,
+                    self.bytes_1c,
+                    note="Sec.-3.1 heuristic at the budget-implied limit",
+                )
+        return list(self._candidates) + list(self._auto_cache.values())
+
+    def plan(self, budget_bytes: float) -> PlannerDecision:
+        cands = []
+        for c in self.candidates(budget_bytes):
+            if c.schedule is None:
+                cands.append(c)
+                continue
+            cands.append(
+                dataclasses.replace(c, feasible=c.total_bytes <= budget_bytes)
+            )
+        feasible = [c for c in cands if c.feasible]
+        finite = [c for c in cands if c.schedule is not None]
+        min_required = min((c.total_bytes for c in finite), default=float("inf"))
+        if not feasible:
+            return PlannerDecision(
+                budget_bytes=budget_bytes,
+                feasible=False,
+                chosen=None,
+                candidates=cands,
+                min_required_bytes=min_required,
+            )
+        best = min(feasible, key=lambda c: (c.cost, c.total_bytes))
+        return PlannerDecision(
+            budget_bytes=budget_bytes,
+            feasible=True,
+            chosen=best,
+            candidates=cands,
+            min_required_bytes=min_required,
+        )

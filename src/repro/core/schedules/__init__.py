@@ -14,6 +14,15 @@ from .ir import (
 from .baselines import gpipe, interleaved_1f1b, one_f_one_b
 from .handcrafted import zb_h1, zb_h2
 from .zbv import zb_v, zb_v_handcrafted
+from .vflex import (
+    activation_peak,
+    stable_v_schedule,
+    v_flex,
+    v_half,
+    v_half_limit,
+    v_min,
+    v_min_limit,
+)
 from .auto import AutoResult, search, zb_1p, zb_2p
 from .greedy import GreedyConfig, greedy_schedule
 from .refine import local_search
@@ -37,6 +46,13 @@ __all__ = [
     "zb_h2",
     "zb_v",
     "zb_v_handcrafted",
+    "activation_peak",
+    "stable_v_schedule",
+    "v_flex",
+    "v_half",
+    "v_half_limit",
+    "v_min",
+    "v_min_limit",
     "AutoResult",
     "search",
     "zb_1p",

@@ -186,6 +186,8 @@ def dryrun_cell(arch_id, shape_id, multi_pod=False, schedule="zb-h2", verbose=Tr
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # one dict per device program
+        cost = cost[0] if cost else {}
     result = {
         "arch": arch_id,
         "shape": shape_id,

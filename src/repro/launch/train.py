@@ -22,7 +22,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, get_reduced
-from ..core.schedules import compile_plan, one_f_one_b, zb_1p, zb_2p, zb_h1, zb_h2, zb_v
+from ..core.schedules import (
+    compile_plan,
+    one_f_one_b,
+    v_half,
+    v_min,
+    zb_1p,
+    zb_2p,
+    zb_h1,
+    zb_h2,
+    zb_v,
+)
 from ..data import DataConfig, SyntheticLM
 from ..models.lm import RunSpec, init_params
 from ..optim import adamw
@@ -35,9 +45,13 @@ SCHEDULES = {
     "zb-h1": zb_h1,
     "zb-h2": zb_h2,
     "zb-v": zb_v,
+    "v-min": v_min,
+    "v-half": v_half,
     "zb-1p": zb_1p,
     "zb-2p": zb_2p,
 }
+
+
 
 
 def build_everything(
@@ -52,9 +66,19 @@ def build_everything(
     tcfg: TrainStepConfig,
     mesh=None,
     binding=None,
+    memory_budget_bytes=None,
 ):
     cfg = get_reduced(arch) if reduced else get_config(arch)
-    sched = SCHEDULES[schedule](pipe_size, m)
+    if memory_budget_bytes is not None:
+        from ..runtime.driver import replan_under_budget
+
+        sched, decision = replan_under_budget(
+            cfg, pipe_size, m, microbatch, seq_len, memory_budget_bytes,
+            tp_size=tp_size,
+        )
+        print(f"memory planner: {decision.summary()}")
+    else:
+        sched = SCHEDULES[schedule](pipe_size, m)
     plan = compile_plan(sched)
     if mesh is None:
         axes = ("data",) if tp_size == 1 else ("data", "model")
@@ -112,6 +136,13 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--postval", default="within_step", choices=["within_step", "sync"])
+    ap.add_argument(
+        "--memory-budget-mb",
+        type=float,
+        default=None,
+        help="per-device schedule memory budget (activations + W-contexts); "
+        "picks the fastest schedule that fits (overrides --schedule)",
+    )
     args = ap.parse_args()
 
     tcfg = TrainStepConfig(
@@ -127,6 +158,11 @@ def main():
         args.seq_len,
         args.m,
         tcfg,
+        memory_budget_bytes=(
+            args.memory_budget_mb * 2**20
+            if args.memory_budget_mb is not None
+            else None
+        ),
     )
     data = SyntheticLM(
         DataConfig(

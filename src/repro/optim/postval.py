@@ -82,7 +82,7 @@ def pipe_prefix_stats(stats: GradStats, axis_name: str) -> Tuple[GradStats, Grad
     that XLA overlaps with the W tail).  Returns the partially-reduced state
     each stage would see in the paper's relay plus the fully-reduced state.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     pre_sq, pre_bad = stats.sumsq, stats.nonfinite.astype(jnp.float32)
     shift = 1

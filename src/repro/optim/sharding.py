@@ -25,7 +25,7 @@ def _pad_len(n: int, dp: int) -> int:
 
 def shard_leaf(x: jax.Array, axis_name: str) -> jax.Array:
     """This rank's flat shard of a (replicated) leaf."""
-    dp = jax.lax.axis_size(axis_name)
+    dp = jax.lax.psum(1, axis_name)
     r = jax.lax.axis_index(axis_name)
     flat = x.reshape(-1)
     k = _pad_len(flat.shape[0], dp) // dp
@@ -44,7 +44,7 @@ def unshard_leaf(shard: jax.Array, shape, dtype, axis_name: str) -> jax.Array:
 
 def scatter_grads(grads: PyTree, axis_name: str) -> PyTree:
     """reduce-scatter: each rank gets the dp-mean of its flat grad shard."""
-    dp = jax.lax.axis_size(axis_name)
+    dp = jax.lax.psum(1, axis_name)
 
     def one(g):
         flat = g.reshape(-1)

@@ -32,6 +32,7 @@ __all__ = [
     "DriverConfig",
     "TrainDriver",
     "replan_for_stragglers",
+    "replan_under_budget",
     "rebalance_layers",
 ]
 
@@ -63,6 +64,43 @@ def replan_for_stragglers(
     base_cost = simulate(balanced.schedule, observed).cost
     replanned = search(p, m, observed, m_limit=m_limit)
     return replanned.schedule, replanned.cost, base_cost
+
+
+def replan_under_budget(
+    cfg,
+    p: int,
+    m: int,
+    microbatch: int,
+    seq_len: int,
+    budget_bytes: float,
+    base_times: Optional[TimeModel] = None,
+    stage_scale=None,
+    tp_size: int = 1,
+):
+    """Re-plan the schedule when the per-device memory budget changes.
+
+    Runtime counterpart of launch-time planning (DESIGN.md Sec. 5): after an
+    elastic reshard, a sequence-length bump, or a co-tenant claiming device
+    memory, the driver re-runs the byte-level planner -- optionally under the
+    monitor's observed straggler profile -- and returns
+    (schedule, PlannerDecision).  Raises RuntimeError with the planner's
+    report when nothing fits, so the caller can shrink the microbatch or
+    spill instead of OOMing mid-run.
+    """
+    from ..core.memory import MemoryBudgetPlanner
+
+    times = base_times or TimeModel.unit()
+    if stage_scale is not None:
+        times = dataclasses.replace(times, stage_scale=tuple(stage_scale))
+    planner = MemoryBudgetPlanner(
+        cfg, p=p, m=m, microbatch=microbatch, seq_len=seq_len,
+        times=times, tp_size=tp_size,
+    )
+    decision = planner.plan(budget_bytes)
+    if not decision.feasible:
+        raise RuntimeError(f"no schedule fits the budget: {decision.summary()}")
+    log.info("replanned under budget: %s", decision.summary())
+    return decision.chosen.schedule, decision
 
 
 def rebalance_layers(

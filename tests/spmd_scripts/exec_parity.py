@@ -26,6 +26,8 @@ from repro.core.schedules import (
     gpipe,
     interleaved_1f1b,
     one_f_one_b,
+    v_half,
+    v_min,
     zb_h1,
     zb_h2,
     zb_v,
@@ -72,6 +74,8 @@ def main():
         "zb-h1": lambda: zb_h1(P_, M_),
         "zb-h2": lambda: zb_h2(P_, M_),
         "zb-v": lambda: zb_v(P_, M_),
+        "v-min": lambda: v_min(P_, M_),
+        "v-half": lambda: v_half(P_, M_),
         "interleaved": lambda: interleaved_1f1b(P_, M_, v=C_),
     }[SCHED]()
     plan = compile_plan(sched)

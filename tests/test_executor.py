@@ -23,6 +23,8 @@ CASES = [
     ("gpipe", 3, 5, 1),
     ("zb-h2", 3, 9, 1),
     ("zb-v", 3, 6, 2),
+    ("v-min", 4, 8, 2),
+    ("v-half", 4, 8, 2),
 ]
 
 

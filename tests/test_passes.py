@@ -95,9 +95,15 @@ def test_dce_split_flops():
         dx, wctx = mod.bwd_x(p, r, g, {})
         return dx, mod.bwd_w(p, r, wctx, {})
 
-    fb = jax.jit(b_only).lower(params, res, dy).compile().cost_analysis()["flops"]
-    fw = jax.jit(w_only).lower(params, res, dy).compile().cost_analysis()["flops"]
-    fboth = jax.jit(both).lower(params, res, dy).compile().cost_analysis()["flops"]
+    def flops(fn):
+        cost = jax.jit(fn).lower(params, res, dy).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):  # one dict per device program
+            cost = cost[0]
+        return cost["flops"]
+
+    fb = flops(b_only)
+    fw = flops(w_only)
+    fboth = flops(both)
     matmul = 2 * 8 * d * d
     assert fb == pytest.approx(matmul, rel=0.05)
     assert fw == pytest.approx(matmul, rel=0.05)
