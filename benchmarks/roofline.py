@@ -244,9 +244,9 @@ def analyze_cell(
             (stage_sdt[0], res_sh, act, side_mb),
         )
         cW = _cost_of(
-            lambda pr, r, w, sd: mod.bwd_w(pr, r, w, sd),
-            mesh, (stage_specs[0], P(), P(), side_specs), stage_specs[0],
-            (stage_sdt[0], res_sh, wctx_sh, side_mb),
+            lambda pr, w, sd: mod.bwd_w(pr, w, sd),
+            mesh, (stage_specs[0], P(), side_specs), stage_specs[0],
+            (stage_sdt[0], wctx_sh, side_mb),
         )
         # sink (final norm + head + CE) fwd+bwd on the loss stage
         sink = program.sink
@@ -264,15 +264,23 @@ def analyze_cell(
             (shared_sdt, act, side_mb),
         )
         ones = jax.ShapeDtypeStruct(loss_sh.shape, loss_sh.dtype)
+        sb_sm = shard_map(
+            lambda sh, r, g, sd: sink.bwd_x(sh, r, g, sd),
+            mesh=mesh,
+            in_specs=(shared_specs, P(), P(), side_specs),
+            out_specs=P(),
+            check_rep=False,
+        )
+        _, swctx_sh = jax.eval_shape(sb_sm, shared_sdt, sres_sh, ones, side_mb)
         cSinkB = _cost_of(
             lambda sh, r, g, sd: sink.bwd_x(sh, r, g, sd),
             mesh, (shared_specs, P(), P(), side_specs), P(),
             (shared_sdt, sres_sh, ones, side_mb),
         )
         cSinkW = _cost_of(
-            lambda sh, r, g, sd: sink.bwd_w(sh, r, g, sd),
-            mesh, (shared_specs, P(), P(), side_specs), shared_specs,
-            (shared_sdt, sres_sh, ones, side_mb),
+            lambda sh, w, sd: sink.bwd_w(sh, w, sd),
+            mesh, (shared_specs, P(), side_specs), shared_specs,
+            (shared_sdt, swctx_sh, side_mb),
         )
         from repro.core.schedules import zb_v as _zbv
 

@@ -11,9 +11,13 @@ auto-searched -- as one SPMD program:
     tick *outside* the switch (pipe-axis collectives must be unconditional
     under SPMD); channels a schedule never uses are pruned at trace time;
   * per-stage state lives in slot-addressed buffers whose sizes come from the
-    plan's interval analysis: activation/gradient inboxes, residuals (F->B),
-    weight-grad contexts (B->W; the paper's "kept nabla_z" memory), and the
-    head+loss residuals at the loss position.
+    plan's interval analysis: activation/gradient inboxes, residuals (F->B,
+    freed when B completes -- the paper's accounting), weight-grad contexts
+    (B->W; the wgrad closure inputs emitted by the true split-VJP), and the
+    head+loss residuals/contexts at the loss position.  When the chunks'
+    buffer structures agree (the uniform-group SPMD case), residual and
+    W-context pools are shared across chunks, so the per-device footprint is
+    the plan's joint cross-chunk peak, not the sum of per-chunk peaks.
 
 SPMD invariant: collectives over the *tensor-parallel* axis may appear inside
 switch branches (all ranks of a TP group share the stage index and therefore
@@ -139,11 +143,13 @@ class PipelineExecutor:
         prune_channels: bool = True,
         tp_axis: Optional[str] = None,
         shard_channels: bool = False,
+        fuse_wgrad: bool = True,
     ):
         if program.n_chunks() != plan.n_chunks:
             raise ValueError(
                 f"program has {program.n_chunks()} chunks, plan {plan.n_chunks}"
             )
+        self.fuse_wgrad = fuse_wgrad
         self.program = program
         self.plan = plan
         self.pipe_axis = pipe_axis
@@ -190,7 +196,126 @@ class PipelineExecutor:
             lambda sh, y, sd: prog.sink.fwd(sh, y, sd), shared, act, side_mb
         )
         loss_shape, sink_res_shape = sink_out
-        return res_shapes, wctx_shapes, sink_res_shape, loss_shape
+        ones = jax.ShapeDtypeStruct(loss_shape.shape, loss_shape.dtype)
+        _, sink_wctx_shape = jax.eval_shape(
+            lambda sh, r, g, sd: prog.sink.bwd_x(sh, r, g, sd),
+            shared,
+            sink_res_shape,
+            ones,
+            side_mb,
+        )
+        return res_shapes, wctx_shapes, sink_res_shape, sink_wctx_shape, loss_shape
+
+    @staticmethod
+    def _uniform(shapes) -> bool:
+        """True when every chunk's buffer pytree has identical structure."""
+        sig = [
+            (
+                jax.tree_util.tree_structure(sh),
+                tuple(
+                    (tuple(l.shape), jnp.dtype(l.dtype).name)
+                    for l in jax.tree_util.tree_leaves(sh)
+                ),
+            )
+            for sh in shapes
+        ]
+        return all(s == sig[0] for s in sig)
+
+    # ------------------------------------------------------------------ #
+    # measured buffer accounting (what the tick executor actually allocates)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _tree_bytes(sh) -> int:
+        return int(
+            sum(
+                int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(sh)
+            )
+        )
+
+    def state_shapes(self, stage_params, shared, side_all):
+        """Abstract buffer state: per-slot structures + slot counts.
+
+        ``stage_params`` / ``shared`` / ``side_all`` may be real arrays or
+        ``ShapeDtypeStruct`` pytrees; nothing is computed.
+        """
+        plan = self.plan
+        res_sh, wctx_sh, sink_sh, sink_wctx_sh, loss_sh = self._abstract_state(
+            stage_params, shared, side_all
+        )
+        share_res = self._uniform(res_sh)
+        share_wctx = self._uniform(wctx_sh)
+        return dict(
+            res=res_sh,
+            wctx=wctx_sh,
+            sink=sink_sh,
+            sink_wctx=sink_wctx_sh,
+            loss=loss_sh,
+            share_res=share_res,
+            share_wctx=share_wctx,
+            n_res_slots=(
+                (plan.n_res_slots_joint,) if share_res else plan.n_res_slots
+            ),
+            n_wctx_slots=(
+                (plan.n_wctx_slots_joint,) if share_wctx else plan.n_wctx_slots
+            ),
+            n_sink_slots=plan.n_sink_slots,
+            n_sink_wctx_slots=plan.n_sink_wctx_slots,
+        )
+
+    def buffer_bytes(self, stage_params, shared, side_all):
+        """Bytes the executor allocates per device, by buffer family.
+
+        These are the *measured* numbers the analytic byte model is checked
+        against (tests/test_measured_memory.py): slot-addressed pools are
+        sized by the plan's interval analysis, so total allocation equals the
+        peak of live bytes over the run (greedy interval coloring is optimal
+        on interval graphs).
+        """
+        plan = self.plan
+        st = self.state_shapes(stage_params, shared, side_all)
+        res_sh, wctx_sh = st["res"], st["wctx"]
+        res_slot_bytes = [self._tree_bytes(sh) for sh in res_sh]
+        wctx_slot_bytes = [self._tree_bytes(sh) for sh in wctx_sh]
+        if st["share_res"]:
+            res_total = plan.n_res_slots_joint * res_slot_bytes[0]
+        else:
+            res_total = sum(
+                n * b for n, b in zip(plan.n_res_slots, res_slot_bytes)
+            )
+        if st["share_wctx"]:
+            wctx_total = plan.n_wctx_slots_joint * wctx_slot_bytes[0]
+        else:
+            wctx_total = sum(
+                n * b for n, b in zip(plan.n_wctx_slots, wctx_slot_bytes)
+            )
+        chan_bytes = int(np.prod(self.program.act_shape)) * jnp.dtype(
+            self.program.act_dtype
+        ).itemsize
+        # the inboxes are flat (C, max-slots) buffers (uniform stride for the
+        # flattened slot indexing in the tick body), so allocation is
+        # C * max(slots) per family, not the per-chunk sum
+        C = plan.n_chunks
+        inbox_total = (
+            C * max(plan.n_act_slots) + C * max(plan.n_grad_slots)
+        ) * chan_bytes
+        sink_total = plan.n_sink_slots * self._tree_bytes(st["sink"])
+        sink_wctx_total = plan.n_sink_wctx_slots * self._tree_bytes(
+            st["sink_wctx"]
+        )
+        return dict(
+            res=float(res_total),
+            wctx=float(wctx_total),
+            inbox=float(inbox_total),
+            sink=float(sink_total),
+            sink_wctx=float(sink_wctx_total),
+            total=float(
+                res_total + wctx_total + inbox_total + sink_total
+                + sink_wctx_total
+            ),
+            res_slot_bytes=tuple(float(b) for b in res_slot_bytes),
+            wctx_slot_bytes=tuple(float(b) for b in wctx_slot_bytes),
+        )
 
     # ------------------------------------------------------------------ #
     def build_grad_fn(self):
@@ -200,9 +325,11 @@ class PipelineExecutor:
 
         def grad_fn(stage_params, shared, side_all):
             # -- static residual structures -------------------------------- #
-            res_sh, wctx_sh, sink_sh, loss_sh = self._abstract_state(
-                stage_params, shared, side_all
+            res_sh, wctx_sh, sink_sh, sink_wctx_sh, loss_sh = (
+                self._abstract_state(stage_params, shared, side_all)
             )
+            share_res = self._uniform(res_sh)
+            share_wctx = self._uniform(wctx_sh)
 
             # -- local tick tables ----------------------------------------- #
             sidx = jax.lax.axis_index(self.pipe_axis)
@@ -215,9 +342,14 @@ class PipelineExecutor:
                 chunk=row(plan.op_chunk),
                 mb=row(plan.op_mb),
                 in_slot=row(plan.op_in_slot),
-                res_slot=row(plan.op_res_slot),
-                wctx_slot=row(plan.op_wctx_slot),
+                res_slot=row(
+                    plan.op_res_slot_joint if share_res else plan.op_res_slot
+                ),
+                wctx_slot=row(
+                    plan.op_wctx_slot_joint if share_wctx else plan.op_wctx_slot
+                ),
                 sink_slot=row(plan.op_sink_slot),
+                sink_wctx_slot=row(plan.op_sink_wctx_slot),
                 is_src=row(plan.op_is_src),
                 is_loss=row(plan.op_is_loss),
                 is_last_b=row(plan.op_is_last_b),
@@ -264,21 +396,53 @@ class PipelineExecutor:
                 return jax.lax.all_gather(
                     slice_, self.tp_axis, axis=1, tiled=True
                 )
-            res_buf = [
-                jax.tree_util.tree_map(
-                    lambda sd: _zeros_buffer(sd, plan.n_res_slots[c]), res_sh[c]
+            # Residual / W-context pools.  Shared across chunks (joint slot
+            # ids) when every chunk's buffer structure matches; per-chunk
+            # pools otherwise.  Residual slots are live [F, B] only: B's true
+            # split-VJP leaves nothing for W to rebuild.
+            if share_res:
+                res_buf = jax.tree_util.tree_map(
+                    lambda sd: _zeros_buffer(sd, plan.n_res_slots_joint),
+                    res_sh[0],
                 )
-                for c in range(C)
-            ]
-            wctx_buf = [
-                jax.tree_util.tree_map(
-                    lambda sd: _zeros_buffer(sd, plan.n_wctx_slots[c]), wctx_sh[c]
+            else:
+                res_buf = [
+                    jax.tree_util.tree_map(
+                        lambda sd: _zeros_buffer(sd, plan.n_res_slots[c]),
+                        res_sh[c],
+                    )
+                    for c in range(C)
+                ]
+            if share_wctx:
+                wctx_buf = jax.tree_util.tree_map(
+                    lambda sd: _zeros_buffer(sd, plan.n_wctx_slots_joint),
+                    wctx_sh[0],
                 )
-                for c in range(C)
-            ]
+            else:
+                wctx_buf = [
+                    jax.tree_util.tree_map(
+                        lambda sd: _zeros_buffer(sd, plan.n_wctx_slots[c]),
+                        wctx_sh[c],
+                    )
+                    for c in range(C)
+                ]
             sink_buf = jax.tree_util.tree_map(
                 lambda sd: _zeros_buffer(sd, plan.n_sink_slots), sink_sh
             )
+            sink_wctx_buf = jax.tree_util.tree_map(
+                lambda sd: _zeros_buffer(sd, plan.n_sink_wctx_slots),
+                sink_wctx_sh,
+            )
+
+            def pool_get(buf, shared_pool, c, idx):
+                return _tree_dyn_get(buf if shared_pool else buf[c], idx)
+
+            def pool_set(buf, shared_pool, c, idx, vals):
+                if shared_pool:
+                    return _tree_dyn_set(buf, idx, vals)
+                lst = list(buf)
+                lst[c] = _tree_dyn_set(lst[c], idx, vals)
+                return lst
             acc_dt = lambda leaf: jnp.promote_types(leaf.dtype, jnp.float32)
             grad_acc = jax.tree_util.tree_map(
                 lambda pleaf: jnp.zeros(pleaf.shape, acc_dt(pleaf)), stage_params
@@ -294,6 +458,7 @@ class PipelineExecutor:
                 res=res_buf,
                 wctx=wctx_buf,
                 sink=sink_buf,
+                sink_wctx=sink_wctx_buf,
                 grad_acc=grad_acc,
                 shared_acc=shared_acc,
                 loss=loss_acc,
@@ -320,9 +485,9 @@ class PipelineExecutor:
                     )
                     y, res = prog.chunks[c].fwd(stage_params[c], x, side_mb)
                     state = dict(state)
-                    res_list = list(state["res"])
-                    res_list[c] = _tree_dyn_set(res_list[c], t["res_slot"], res)
-                    state["res"] = res_list
+                    state["res"] = pool_set(
+                        state["res"], share_res, c, t["res_slot"], res
+                    )
 
                     def with_loss(st):
                         loss, sres = prog.sink.fwd(shared, y, side_mb)
@@ -345,7 +510,7 @@ class PipelineExecutor:
             def b_branch(c):
                 def body(state, t):
                     side_mb = side_at(t["mb"])
-                    res = _tree_dyn_get(state["res"][c], t["res_slot"])
+                    res = pool_get(state["res"], share_res, c, t["res_slot"])
                     dy_inbox = from_chan(
                         _dyn_get(state["grad_in"][c], t["in_slot"])
                     )
@@ -355,25 +520,40 @@ class PipelineExecutor:
                         def from_sink(_):
                             sres = _tree_dyn_get(state["sink"], t["sink_slot"])
                             ones = jnp.ones(loss_sh.shape, loss_sh.dtype)
-                            dy_s, _sink_wctx = prog.sink.bwd_x(
+                            dy_s, swctx = prog.sink.bwd_x(
                                 shared, sres, ones, side_mb
                             )
-                            return dy_s.astype(prog.act_dtype)
+                            return dy_s.astype(prog.act_dtype), swctx
 
-                        dy = jax.lax.cond(
-                            t["is_loss"], from_sink, lambda _: dy_inbox, None
+                        def from_inbox(_):
+                            zeros = jax.tree_util.tree_map(
+                                lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                                sink_wctx_sh,
+                            )
+                            return dy_inbox, zeros
+
+                        dy, swctx_val = jax.lax.cond(
+                            t["is_loss"], from_sink, from_inbox, None
+                        )
+                        state["sink_wctx"] = jax.tree_util.tree_map(
+                            lambda b, v: _masked_set(
+                                b, t["sink_wctx_slot"], v, t["is_loss"]
+                            ),
+                            state["sink_wctx"],
+                            swctx_val,
                         )
                     else:
                         dy = dy_inbox
 
+                    # True input-gradient VJP: emits the compact M_W context
+                    # (wgrad closure inputs); the residual slot is dead after
+                    # this tick and the interval analysis reuses it.
                     dx, wctx = prog.chunks[c].bwd_x(
                         stage_params[c], res, dy, side_mb
                     )
-                    wctx_list = list(state["wctx"])
-                    wctx_list[c] = _tree_dyn_set(
-                        wctx_list[c], t["wctx_slot"], wctx
+                    state["wctx"] = pool_set(
+                        state["wctx"], share_wctx, c, t["wctx_slot"], wctx
                     )
-                    state["wctx"] = wctx_list
 
                     if c == 0:
                         def embed_grads(st):
@@ -396,21 +576,29 @@ class PipelineExecutor:
             def w_branch(c):
                 def body(state, t):
                     side_mb = side_at(t["mb"])
-                    res = _tree_dyn_get(state["res"][c], t["res_slot"])
-                    wctx = _tree_dyn_get(state["wctx"][c], t["wctx_slot"])
-                    g = prog.chunks[c].bwd_w(stage_params[c], res, wctx, side_mb)
+                    # W consumes only the M_W context -- no residuals, no
+                    # pullback rebuild.  Terminal dW = a^T @ g products are
+                    # fused into the accumulator via kernels/wgrad_accum.
+                    wctx = pool_get(state["wctx"], share_wctx, c, t["wctx_slot"])
                     state = dict(state)
                     acc = list(state["grad_acc"])
-                    acc[c] = jax.tree_util.tree_map(
-                        lambda a, b: a + b.astype(a.dtype), acc[c], g
-                    )
+                    if self.fuse_wgrad:
+                        acc[c] = prog.chunks[c].bwd_w(
+                            stage_params[c], wctx, side_mb, acc=acc[c]
+                        )
+                    else:
+                        g = prog.chunks[c].bwd_w(stage_params[c], wctx, side_mb)
+                        acc[c] = jax.tree_util.tree_map(
+                            lambda a, b: a + b.astype(a.dtype), acc[c], g
+                        )
                     state["grad_acc"] = type(state["grad_acc"])(acc)
 
                     if c == C - 1:
                         def sink_grads(st):
-                            sres = _tree_dyn_get(st["sink"], t["sink_slot"])
-                            ones = jnp.ones(loss_sh.shape, loss_sh.dtype)
-                            sg = prog.sink.bwd_w(shared, sres, ones, side_mb)
+                            swctx = _tree_dyn_get(
+                                st["sink_wctx"], t["sink_wctx_slot"]
+                            )
+                            sg = prog.sink.bwd_w(shared, swctx, side_mb)
                             st = dict(st)
                             st["shared_acc"] = jax.tree_util.tree_map(
                                 lambda a, b: a + b.astype(a.dtype),

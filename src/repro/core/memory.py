@@ -23,7 +23,16 @@ Three layers (DESIGN.md Sec. 5):
    so the same schedule is costed differently for e.g. gemma2 (d_ff = 4x)
    and a recurrent arch.
 
-3. :class:`MemoryBudgetPlanner` -- given a config and a per-device byte
+3. :func:`measured_timeline` -- the *measured* counterpart of (1)+(2): reads
+   the actual tick-executor buffer shapes (``PipelineExecutor.buffer_bytes``
+   / ``state_shapes``) and replays the plan's interval analysis (the
+   executor's real alloc/free semantics) into per-tick live bytes.  This is
+   how the analytic model is cross-checked against reality
+   (tests/test_measured_memory.py): the executor's statically allocated
+   slot pools equal the peak of the measured timeline, because greedy
+   interval coloring is optimal on interval graphs.
+
+4. :class:`MemoryBudgetPlanner` -- given a config and a per-device byte
    budget, simulates the whole schedule family {1F1B, interleaved 1F1B,
    ZB-H1, ZB-H2, ZB-V, V-Half, V-Min, memory-limited auto-search} and
    returns the fastest plan whose modeled bytes fit, or an explicit
@@ -48,6 +57,9 @@ __all__ = [
     "CandidatePlan",
     "PlannerDecision",
     "MemoryBudgetPlanner",
+    "MeasuredTimeline",
+    "measured_timeline",
+    "measured_unit_bytes",
 ]
 
 
@@ -96,17 +108,33 @@ def memory_timeline(
     times: Optional[TimeModel] = None,
     m_b: float = 1.0,
     m_w: float = 0.5,
+    tick_times: bool = False,
 ) -> MemoryTimeline:
     """Track live activation / W-context buffers over simulated time.
 
     Conservative edges: allocations happen at op *start*, frees at op *end*
     (an activation is still resident while its B runs; the W-context is
     resident while its W runs).
+
+    ``tick_times=True`` replaces the event-driven clock with the tick grid
+    the SPMD executor actually runs on (every pass occupies one tick) -- the
+    timebase to use when cross-checking against measured executor buffers.
     """
     times = times or TimeModel.unit()
-    res = simulate(schedule, times)
+    if tick_times:
+        ticks = schedule.to_ticks()
+        start_of = {k: float(t) for k, t in ticks.items()}
+        end_of = {k: float(t) + 1.0 for k, t in ticks.items()}
+    else:
+        res = simulate(schedule, times)
+        start_of, end_of = res.start, res.end
     C = schedule.n_chunks
     mb_c, mw_c = m_b / C, m_w / C
+    # Edge ordering at equal times: continuous time is conservative
+    # (allocations land before frees -- overlapping ops), the tick grid is
+    # the executor's semantics (a slot freed at tick t is rewritten by the
+    # next tick's op, so frees land at the boundary first).
+    ao, fo = (1, 0) if tick_times else (0, 1)
 
     p = schedule.p
     events: List[List[Tuple[float, float, float]]] = []
@@ -116,14 +144,14 @@ def memory_timeline(
     for s in range(p):
         deltas: List[Tuple[float, int, float, float]] = []  # (t, order, d_act, d_wctx)
         for op in schedule.stage_ops[s]:
-            t0, t1 = res.start[(s, op)], res.end[(s, op)]
+            t0, t1 = start_of[(s, op)], end_of[(s, op)]
             if op.kind == OpKind.F:
-                deltas.append((t0, 0, mb_c, 0.0))
+                deltas.append((t0, ao, mb_c, 0.0))
             elif op.kind == OpKind.B:
-                deltas.append((t0, 0, 0.0, mw_c))
-                deltas.append((t1, 1, -mb_c, 0.0))
+                deltas.append((t0, ao, 0.0, mw_c))
+                deltas.append((t1, fo, -mb_c, 0.0))
             else:
-                deltas.append((t1, 1, 0.0, -mw_c))
+                deltas.append((t1, fo, 0.0, -mw_c))
         deltas.sort(key=lambda d: (d[0], d[1]))
         act = wctx = 0.0
         series: List[Tuple[float, float, float]] = []
@@ -246,14 +274,153 @@ class ActivationByteModel:
         return act, wctx, total
 
     def schedule_bytes(
-        self, schedule: Schedule, times: Optional[TimeModel] = None
+        self,
+        schedule: Schedule,
+        times: Optional[TimeModel] = None,
+        tick_times: bool = False,
     ) -> Tuple[float, float, float]:
         """(act_bytes, wctx_bytes, total_bytes) peak per device."""
-        return self.timeline_bytes(memory_timeline(schedule, times, m_b=1.0, m_w=1.0))
+        return self.timeline_bytes(
+            memory_timeline(
+                schedule, times, m_b=1.0, m_w=1.0, tick_times=tick_times
+            )
+        )
+
+    @staticmethod
+    def from_measured(m_b_bytes: float, m_w_bytes: float) -> "ActivationByteModel":
+        """Byte model calibrated from *measured* executor buffer bytes
+        (:func:`measured_unit_bytes`) instead of the analytic per-kind table."""
+        return ActivationByteModel(
+            m_b_bytes=float(m_b_bytes),
+            m_w_bytes=float(m_w_bytes),
+            per_layer_act=float(m_b_bytes),
+            per_layer_wctx=float(m_w_bytes),
+            layers_per_stage=1,
+            tokens=0,
+            dtype_bytes=0,
+        )
 
 
 # --------------------------------------------------------------------- #
-# 3. budget planner
+# 3. measured executor memory
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class MeasuredTimeline:
+    """Per-stage live executor-buffer bytes over ticks, from real shapes.
+
+    ``act_bytes`` counts the F->B residual pools (the paper's M_B term,
+    freed when B completes), ``wctx_bytes`` the B->W contexts (M_W),
+    ``inbox_bytes`` the channel inboxes, ``sink_bytes`` the head+loss
+    residuals + contexts at the loss stage.  ``alloc_*`` are the executor's
+    static slot-pool allocations; per stage, peak(live) == alloc because the
+    pools are sized by optimal interval coloring.
+    """
+
+    p: int
+    n_ticks: int
+    act_bytes: np.ndarray  # (p, T)
+    wctx_bytes: np.ndarray  # (p, T)
+    inbox_bytes: np.ndarray  # (p, T)
+    sink_bytes: np.ndarray  # (p, T)
+    alloc_act: float
+    alloc_wctx: float
+    alloc_inbox: float
+    alloc_sink: float
+    alloc_total: float
+    res_slot_bytes: Tuple[float, ...]  # per chunk
+    wctx_slot_bytes: Tuple[float, ...]
+
+    @property
+    def peak_act(self) -> np.ndarray:
+        return self.act_bytes.max(axis=1)
+
+    @property
+    def peak_wctx(self) -> np.ndarray:
+        return self.wctx_bytes.max(axis=1)
+
+    @property
+    def peak_total(self) -> np.ndarray:
+        return (
+            self.act_bytes + self.wctx_bytes + self.inbox_bytes + self.sink_bytes
+        ).max(axis=1)
+
+    @property
+    def max_peak_act(self) -> float:
+        return float(self.peak_act.max())
+
+    @property
+    def max_peak_wctx(self) -> float:
+        return float(self.peak_wctx.max())
+
+    def unit_bytes(self) -> Tuple[float, float]:
+        """(m_b_bytes, m_w_bytes): one microbatch through one full stage."""
+        return (
+            float(sum(self.res_slot_bytes)),
+            float(sum(self.wctx_slot_bytes)),
+        )
+
+
+def measured_unit_bytes(executor, stage_params, shared, side_all):
+    """(m_b_bytes, m_w_bytes) measured from the executor's real buffers.
+
+    One full-stage M_B unit = the residual bytes of one microbatch through
+    every chunk of a stage (sum of per-chunk slot bytes); likewise M_W for
+    the B->W context.  Use these to calibrate an :class:`ActivationByteModel`
+    against the program instead of the analytic per-kind table.
+    """
+    bb = executor.buffer_bytes(stage_params, shared, side_all)
+    return float(sum(bb["res_slot_bytes"])), float(sum(bb["wctx_slot_bytes"]))
+
+
+def measured_timeline(
+    executor, stage_params, shared, side_all
+) -> MeasuredTimeline:
+    """Replay the plan's interval analysis weighted by real buffer bytes.
+
+    ``executor`` is a :class:`~repro.core.executor.PipelineExecutor`;
+    ``stage_params``/``shared``/``side_all`` may be arrays or
+    ``ShapeDtypeStruct`` pytrees (nothing is computed).  The per-tick live
+    counts come from the compiled plan -- they ARE the executor's alloc/free
+    semantics: a residual slot is live [F, B], a W-context slot [B, W] --
+    and are weighted by the byte size of one slot of each pool.
+    """
+    plan = executor.plan
+    bb = executor.buffer_bytes(stage_params, shared, side_all)
+    p, T, C = plan.p, plan.n_ticks, plan.n_chunks
+
+    act = np.zeros((p, T))
+    wctx = np.zeros((p, T))
+    for c in range(C):
+        act += plan.res_live[c] * bb["res_slot_bytes"][c]
+        wctx += plan.wctx_live[c] * bb["wctx_slot_bytes"][c]
+    chan_bytes = float(
+        np.prod(executor.program.act_shape)
+    ) * np.dtype(executor.program.act_dtype).itemsize
+    inbox = (
+        plan.inbox_act_live.sum(axis=0) + plan.inbox_grad_live.sum(axis=0)
+    ) * chan_bytes
+    sink_slot = bb["sink"] / max(1, plan.n_sink_slots)
+    sink_wctx_slot = bb["sink_wctx"] / max(1, plan.n_sink_wctx_slots)
+    sink = plan.sink_live * sink_slot + plan.sink_wctx_live * sink_wctx_slot
+    return MeasuredTimeline(
+        p=p,
+        n_ticks=T,
+        act_bytes=act,
+        wctx_bytes=wctx,
+        inbox_bytes=inbox.astype(float),
+        sink_bytes=sink.astype(float),
+        alloc_act=bb["res"],
+        alloc_wctx=bb["wctx"],
+        alloc_inbox=bb["inbox"],
+        alloc_sink=bb["sink"] + bb["sink_wctx"],
+        alloc_total=bb["total"],
+        res_slot_bytes=bb["res_slot_bytes"],
+        wctx_slot_bytes=bb["wctx_slot_bytes"],
+    )
+
+
+# --------------------------------------------------------------------- #
+# 4. budget planner
 # --------------------------------------------------------------------- #
 @dataclasses.dataclass
 class CandidatePlan:

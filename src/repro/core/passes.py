@@ -2,7 +2,7 @@
 
 Every pipeline-stage computation is an :class:`FBWModule` with three passes:
 
-  * ``fwd(params, x, side)   -> (y, res)``       -- forward, saving residuals
+  * ``fwd(params, x, side)   -> (y, res)``        -- forward, saving residuals
   * ``bwd_x(params, res, dy, side) -> (dx, wctx)`` -- input gradient (B)
   * ``bwd_w(params, wctx, side)    -> grads``      -- parameter gradient (W)
 
@@ -10,34 +10,52 @@ Every pipeline-stage computation is an :class:`FBWModule` with three passes:
 any time after its ``B`` on the same stage -- exactly the degree of freedom
 the zero-bubble schedules exploit.
 
-:func:`auto_fbw` derives a split for *any* JAX function, with true
-computational separation (not rematerialization):
+:func:`auto_fbw` derives a *true* split for any JAX function by partitioning
+the backward jaxpr (no rematerialization, no pullback rebuild at W):
 
-  1. ``fwd`` runs ``jax.vjp`` once; the returned pullback closure is a pytree
+  1. ``fwd`` runs ``jax.vjp`` once; the pullback closure is a pytree
      (``jax.tree_util.Partial``), so its residuals are extracted by
      ``tree_flatten`` and stored in pipeline buffers.  Leaves that are merely
      forwarded parameter / side-input tracers are detected by object identity
      and *not* stored -- they are re-injected from the stage's own
-     params/side at B/W time (otherwise every in-flight microbatch would
-     duplicate the stage weights).
-  2. ``bwd_x`` rebuilds the pullback and returns only ``dx``: XLA dead-code
-     eliminates the dW matmuls from the B pass.
-  3. ``bwd_w`` rebuilds it again and returns only ``grads``: the dx chain is
-     DCE'd from the W pass.
+     params/side at B/W time.
+  2. On the first backward trace, the full pullback application
+     ``(params, side, res, dy) -> (dparams, dx)`` is staged to a jaxpr and
+     partitioned: an equation belongs to the **B slice** iff its outputs are
+     (transitively) needed for ``dx``; the remaining equations needed for
+     ``dparams`` form the **W slice**.  The values crossing the cut -- the
+     wgrad closure inputs: per-matmul input activations plus the upstream
+     cotangents materialized by B -- are the paper's ``M_W`` context.
+  3. ``bwd_x`` evaluates only the B slice and returns ``(dx, wctx)`` where
+     ``wctx`` is the tuple of cut values.  The F->B residuals are dead after
+     this point: the executor frees their slot at B.
+  4. ``bwd_w`` evaluates only the W slice from ``wctx`` plus re-injected
+     params/side.  Nothing is recomputed; the residuals are gone.
 
 FLOPs therefore match the paper's Table 1 split (B and W each carry one of
-the two backward matmuls per forward matmul).  The auto path keeps the full
-residual set alive until W (M_W = M_B + |dy|); manual modules may override
-``bwd_x``/``bwd_w`` with a leaner hand-split wctx (M_W < M_B, Table 1).
+the two backward matmuls per forward matmul), and the *memory* now matches
+the paper's accounting too: only ``M_W`` survives past B.  ``bwd_w``
+optionally takes a gradient accumulator; terminal ``dW = a^T @ g`` outer
+products are then routed through the fused accumulation kernel
+(:func:`repro.kernels.ops.wgrad_accum`, paper App. A) when dtypes allow.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+try:  # jax >= 0.4.36 re-exports the core IR types here
+    from jax.extend import core as _jcore
+except ImportError:  # pragma: no cover
+    import jax.core as _jcore
+
+_Var = _jcore.Var
+_Literal = _jcore.Literal
+_DropVar = getattr(_jcore, "DropVar", None) or jax.core.DropVar
 
 __all__ = ["FBWModule", "auto_fbw", "SequentialFBW", "loss_seed"]
 
@@ -62,22 +80,137 @@ class FBWModule:
         raise NotImplementedError
 
     def bwd_w(
-        self, params: PyTree, res: PyTree, wctx: PyTree, side: PyTree
+        self, params: PyTree, wctx: PyTree, side: PyTree, acc: Optional[PyTree] = None
     ) -> PyTree:
-        """Parameter gradients from residuals (held F->W) + the B pass's
-        wctx (the paper's nabla_z extras; for auto modules just dy)."""
+        """Parameter gradients from the B pass's wctx alone (the paper's
+        M_W context).  The F->B residuals are *not* available: they are
+        freed when B completes.  When ``acc`` (a pytree matching params) is
+        given, returns ``acc + grads`` with terminal outer products fused
+        through the wgrad-accumulation kernel where dtypes allow."""
         raise NotImplementedError
 
     # convenience: fused backward for parity testing against jax.grad
     def bwd_full(self, params, res, dy, side):
         dx, wctx = self.bwd_x(params, res, dy, side)
-        return dx, self.bwd_w(params, res, wctx, side)
+        return dx, self.bwd_w(params, wctx, side)
 
 
 # --------------------------------------------------------------------- #
 # automatic split
 # --------------------------------------------------------------------- #
 _STORE, _PARAM, _SIDE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class _SplitPlan:
+    """Static partition of one backward jaxpr into B / W slices."""
+
+    jaxpr: Any  # jax core Jaxpr
+    consts: List[Any]
+    b_eqns: List[int]
+    w_eqns: List[int]
+    cut_vars: List[Any]  # values riding the M_W context, in capture order
+    reinject: Dict[Any, int]  # var -> flat (params+side) leaf index
+    dp_vars: List[Any]
+    dx_vars: List[Any]
+    dp_tree: Any
+    dx_tree: Any
+    n_p: int
+    n_s: int
+    # dp leaf -> ("fuse", a_var, g_var, {eqn ids to skip}) | None
+    wgrad_routes: List[Optional[Tuple]]
+    key: Tuple
+
+
+def _avals_key(*trees):
+    return tuple(
+        (tuple(l.shape), jnp.result_type(l).name)
+        for l in jax.tree_util.tree_leaves(trees)
+    )
+
+
+def _eval_eqns(jaxpr, eqn_ids, env, skip=()):
+    for i in eqn_ids:
+        if i in skip:
+            continue
+        eqn = jaxpr.eqns[i]
+        invals = [
+            v.val if isinstance(v, _Literal) else env[v] for v in eqn.invars
+        ]
+        ans = eqn.primitive.bind(*invals, **eqn.params)
+        outs = ans if eqn.primitive.multiple_results else [ans]
+        for var, val in zip(eqn.outvars, outs):
+            if not isinstance(var, _DropVar):
+                env[var] = val
+
+
+def _read(v, env):
+    return jnp.asarray(v.val) if isinstance(v, _Literal) else env[v]
+
+
+def _find_wgrad_routes(jaxpr, w_eqns, dp_vars):
+    """Terminal ``dW = a^T @ g`` patterns eligible for fused accumulation.
+
+    Matches a dp output produced (within the W slice) by either
+    ``dot_general(u, v)`` contracting dim 0 with dim 0 (dW = u^T v), or the
+    same followed by a rank-2 ``transpose`` (dW = v^T u).  The matched
+    equations can then be *replaced* by one `wgrad_accum` call.
+    """
+    producer = {}
+    use_count: Dict[Any, int] = {}
+    w_set = set(w_eqns)
+    for i, eqn in enumerate(jaxpr.eqns):
+        for ov in eqn.outvars:
+            if not isinstance(ov, _DropVar):
+                producer[ov] = i
+        for v in eqn.invars:
+            if isinstance(v, _Var):
+                use_count[v] = use_count.get(v, 0) + 1
+    for v in jaxpr.outvars:
+        if isinstance(v, _Var):
+            use_count[v] = use_count.get(v, 0) + 1
+
+    def _is_wgrad_dot(eqn):
+        # dW = a^T @ g with the token dims flattened: contract every leading
+        # dim of both rank-k operands (k >= 2), no batch dims.
+        if eqn.primitive.name != "dot_general":
+            return False
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        if lb or rb:
+            return False
+        if not all(
+            isinstance(v, _Var) and len(v.aval.shape) >= 2 for v in eqn.invars
+        ):
+            return False
+        k = len(eqn.invars[0].aval.shape)
+        lead = tuple(range(k - 1))
+        return (
+            len(eqn.invars[1].aval.shape) == k
+            and tuple(lc) == lead
+            and tuple(rc) == lead
+        )
+
+    routes = []
+    for dp in dp_vars:
+        route = None
+        i = producer.get(dp)
+        if i is not None and i in w_set and use_count.get(dp, 0) == 1:
+            eqn = jaxpr.eqns[i]
+            if _is_wgrad_dot(eqn):
+                u, v = eqn.invars
+                route = ("fuse", u, v, frozenset([i]))
+            elif (
+                eqn.primitive.name == "transpose"
+                and tuple(eqn.params["permutation"]) == (1, 0)
+                and isinstance(eqn.invars[0], _Var)
+                and use_count.get(eqn.invars[0], 0) == 1
+            ):
+                j = producer.get(eqn.invars[0])
+                if j is not None and j in w_set and _is_wgrad_dot(jaxpr.eqns[j]):
+                    u, v = jaxpr.eqns[j].invars
+                    route = ("fuse", v, u, frozenset([i, j]))
+        routes.append(route)
+    return routes
 
 
 class _AutoFBW(FBWModule):
@@ -92,6 +225,7 @@ class _AutoFBW(FBWModule):
         self.name = name
         self._treedef = None
         self._spec: Optional[List[Tuple[int, int]]] = None
+        self._split: Optional[_SplitPlan] = None
 
     def init(self, key):
         if self._init_fn is None:
@@ -138,18 +272,192 @@ class _AutoFBW(FBWModule):
                 leaves.append(s_leaves[i])
         return jax.tree_util.tree_unflatten(self._treedef, leaves)
 
-    # -- B: input gradient only (dW chain is DCE'd) ------------------------ #
-    def bwd_x(self, params, res, dy, side):
-        pullback = self._rebuild(params, res, side)
-        _, dx = pullback(dy)
-        return dx, dy  # wctx = the output cotangent only; res rides its buffer
+    # -- backward-jaxpr partition ------------------------------------------ #
+    def _ensure_split(self, params, res, dy, side) -> _SplitPlan:
+        key = _avals_key(params, res, dy, side)
+        if self._split is not None and self._split.key == key:
+            return self._split
 
-    # -- W: parameter gradient only (dx chain is DCE'd) -------------------- #
-    def bwd_w(self, params, res, wctx, side):
-        dy = wctx
-        pullback = self._rebuild(params, res, side)
-        grads, _ = pullback(dy)
-        return grads
+        p_leaves = jax.tree_util.tree_leaves(params)
+        s_leaves = jax.tree_util.tree_leaves(side)
+        dy_leaves, dy_tree = jax.tree_util.tree_flatten(dy)
+        n_p, n_s = len(p_leaves), len(s_leaves)
+
+        def joint(pl, sl, st, dyl):
+            p2 = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(params), pl
+            )
+            s2 = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(side), sl
+            )
+            pb = self._rebuild(p2, st, s2)
+            dp, dx = pb(jax.tree_util.tree_unflatten(dy_tree, dyl))
+            return dp, dx
+
+        closed, out_shape = jax.make_jaxpr(joint, return_shape=True)(
+            p_leaves, s_leaves, list(res), dy_leaves
+        )
+        if any(isinstance(c, jax.core.Tracer) for c in closed.consts):
+            raise RuntimeError(
+                f"{self.name}: backward jaxpr captured tracer constants; "
+                "route all data through params/x/side"
+            )
+        jaxpr = closed.jaxpr
+        dp_shape, dx_shape = out_shape
+        dp_tree = jax.tree_util.tree_structure(dp_shape)
+        dx_tree = jax.tree_util.tree_structure(dx_shape)
+        n_dp = dp_tree.num_leaves
+        dp_vars = list(jaxpr.outvars[:n_dp])
+        dx_vars = list(jaxpr.outvars[n_dp:])
+
+        def needed(targets):
+            need = set(v for v in targets if isinstance(v, _Var))
+            for eqn in reversed(jaxpr.eqns):
+                if any(ov in need for ov in eqn.outvars):
+                    need.update(v for v in eqn.invars if isinstance(v, _Var))
+            return need
+
+        need_dx = needed(dx_vars)
+        need_dp = needed(dp_vars)
+        b_eqns = [
+            i
+            for i, e in enumerate(jaxpr.eqns)
+            if any(ov in need_dx for ov in e.outvars)
+        ]
+        b_set = set(b_eqns)
+        w_eqns = [
+            i
+            for i, e in enumerate(jaxpr.eqns)
+            if i not in b_set and any(ov in need_dp for ov in e.outvars)
+        ]
+        w_prod = set(ov for i in w_eqns for ov in jaxpr.eqns[i].outvars)
+        invar_idx = {v: i for i, v in enumerate(jaxpr.invars)}
+        constvars = set(jaxpr.constvars)
+
+        seen = set()
+        cut_vars: List[Any] = []
+        reinject: Dict[Any, int] = {}
+
+        def classify(v):
+            if not isinstance(v, _Var) or v in seen:
+                return
+            seen.add(v)
+            if v in w_prod or v in constvars:
+                return
+            i = invar_idx.get(v)
+            if i is not None and i < n_p + n_s:
+                reinject[v] = i  # param / side leaf: re-injected, not stored
+                return
+            cut_vars.append(v)  # B-produced value or stored/dy leaf: M_W
+
+        for i in w_eqns:
+            for v in jaxpr.eqns[i].invars:
+                classify(v)
+        for v in dp_vars:
+            classify(v)
+
+        self._split = _SplitPlan(
+            jaxpr=jaxpr,
+            consts=list(closed.consts),
+            b_eqns=b_eqns,
+            w_eqns=w_eqns,
+            cut_vars=cut_vars,
+            reinject=reinject,
+            dp_vars=dp_vars,
+            dx_vars=dx_vars,
+            dp_tree=dp_tree,
+            dx_tree=dx_tree,
+            n_p=n_p,
+            n_s=n_s,
+            wgrad_routes=_find_wgrad_routes(jaxpr, w_eqns, dp_vars),
+            key=key,
+        )
+        return self._split
+
+    # -- B: input gradient; emits the compact M_W context ------------------ #
+    def bwd_x(self, params, res, dy, side):
+        plan = self._ensure_split(params, res, dy, side)
+        env = dict(zip(plan.jaxpr.constvars, plan.consts))
+        flat = (
+            jax.tree_util.tree_leaves(params)
+            + jax.tree_util.tree_leaves(side)
+            + list(res)
+            + jax.tree_util.tree_leaves(dy)
+        )
+        env.update(zip(plan.jaxpr.invars, flat))
+        _eval_eqns(plan.jaxpr, plan.b_eqns, env)
+        dx = jax.tree_util.tree_unflatten(
+            plan.dx_tree, [_read(v, env) for v in plan.dx_vars]
+        )
+        wctx = tuple(env[v] for v in plan.cut_vars)
+        return dx, wctx
+
+    # -- W: parameter gradient from the M_W context alone ------------------- #
+    def bwd_w(self, params, wctx, side, acc=None):
+        plan = self._split
+        if plan is None:
+            raise RuntimeError(
+                f"{self.name}: bwd_x must be traced before bwd_w"
+            )
+        got = tuple(
+            (tuple(w.shape), jnp.result_type(w).name) for w in wctx
+        )
+        want = tuple(
+            (tuple(v.aval.shape), jnp.result_type(v.aval.dtype).name)
+            for v in plan.cut_vars
+        )
+        if got != want:
+            raise RuntimeError(
+                f"{self.name}: wctx does not match the cached split (module "
+                f"re-traced at different shapes between bwd_x and bwd_w?): "
+                f"got {got[:4]}..., want {want[:4]}..."
+            )
+        env = dict(zip(plan.jaxpr.constvars, plan.consts))
+        flat_ps = jax.tree_util.tree_leaves(params) + jax.tree_util.tree_leaves(
+            side
+        )
+        for v, i in plan.reinject.items():
+            env[v] = flat_ps[i]
+        env.update(zip(plan.cut_vars, wctx))
+
+        fused: Dict[int, Any] = {}
+        skip = set()
+        if acc is not None:
+            acc_leaves = jax.tree_util.tree_leaves(acc)
+            for k, route in enumerate(plan.wgrad_routes):
+                if route is None:
+                    continue
+                a_leaf = acc_leaves[k]
+                if jnp.result_type(a_leaf) != jnp.float32:
+                    continue  # the fused kernel accumulates in fp32 only
+                fused[k] = route
+                skip |= set(route[3])
+        _eval_eqns(plan.jaxpr, plan.w_eqns, env, skip=skip)
+
+        if acc is None:
+            grads = [_read(v, env) for v in plan.dp_vars]
+            return jax.tree_util.tree_unflatten(plan.dp_tree, grads)
+
+        from ..kernels.ops import wgrad_accum
+
+        out = []
+        for k, (v, a_leaf) in enumerate(zip(plan.dp_vars, acc_leaves)):
+            route = fused.get(k)
+            if route is not None:
+                _, a_var, g_var, _ = route
+                a = env[a_var]
+                g = env[g_var]
+                out.append(
+                    wgrad_accum(
+                        a.reshape(-1, a.shape[-1]),
+                        g.reshape(-1, g.shape[-1]),
+                        a_leaf,
+                    )
+                )
+            else:
+                g = _read(v, env)
+                out.append(a_leaf + g.astype(a_leaf.dtype))
+        return jax.tree_util.tree_unflatten(plan.dp_tree, out)
 
     def ensure_traced(self, params, x, side) -> None:
         """Populate the static residual spec without running any compute."""
@@ -161,7 +469,7 @@ def auto_fbw(
     init_fn: Optional[Callable[[jax.Array], PyTree]] = None,
     name: str = "auto",
 ) -> _AutoFBW:
-    """Split any ``f(params, x, side) -> y`` into F/B/W passes."""
+    """Split any ``f(params, x, side) -> y`` into true F/B/W passes."""
     return _AutoFBW(f, init_fn, name)
 
 
@@ -171,9 +479,9 @@ def auto_fbw(
 class SequentialFBW(FBWModule):
     """Compose FBW modules; F runs left-to-right, B right-to-left.
 
-    During B, each sub-module's dy is materialized and packed into the
-    wctx -- these are exactly the paper's "extra gradients (nabla_z L) kept
-    for W" (Table 1).
+    During B, each sub-module emits its own compact M_W context; the tuple
+    of these per-block contexts is exactly the paper's "extra gradients
+    (nabla_z L) kept for W" (Table 1) plus the wgrad matmul inputs.
     """
 
     def __init__(self, modules: Sequence[FBWModule], name: str = "seq"):
@@ -198,10 +506,15 @@ class SequentialFBW(FBWModule):
             wctx_all[i] = wctx
         return dy, tuple(wctx_all)
 
-    def bwd_w(self, params, res, wctx, side):
+    def bwd_w(self, params, wctx, side, acc=None):
+        if acc is None:
+            return tuple(
+                mod.bwd_w(p, w, side)
+                for mod, p, w in zip(self.modules, params, wctx)
+            )
         return tuple(
-            mod.bwd_w(p, r, w, side)
-            for mod, p, r, w in zip(self.modules, params, res, wctx)
+            mod.bwd_w(p, w, side, acc=a)
+            for mod, p, w, a in zip(self.modules, params, wctx, acc)
         )
 
     def ensure_traced(self, params, x, side) -> None:

@@ -414,12 +414,15 @@ class ExecutionPlan:
     op_chunk: np.ndarray  # (p, T)
     op_mb: np.ndarray  # (p, T)
     op_in_slot: np.ndarray  # (p, T) inbox slot consumed by F (act) / B (grad)
-    op_res_slot: np.ndarray  # (p, T) residual slot (written by F, read by B)
+    op_res_slot: np.ndarray  # (p, T) residual slot (written by F, freed by B)
     op_wctx_slot: np.ndarray  # (p, T) weight-grad context slot (B -> W)
+    op_res_slot_joint: np.ndarray  # (p, T) slot in the cross-chunk shared pool
+    op_wctx_slot_joint: np.ndarray  # (p, T) slot in the cross-chunk shared pool
     op_is_src: np.ndarray  # (p, T) bool: F reads batch tokens / B or W at pos0 chunk0
     op_is_loss: np.ndarray  # (p, T) bool: F/B/W at the loss position
     op_is_last_b: np.ndarray  # (p, T) bool: B at pos0 of chunk0 (no dx send)
-    op_sink_slot: np.ndarray  # (p, T) sink (head+loss) residual slot, [F..W]
+    op_sink_slot: np.ndarray  # (p, T) sink (head+loss) residual slot, [F..B]
+    op_sink_wctx_slot: np.ndarray  # (p, T) sink W-context slot, [B..W]
 
     send_channel: np.ndarray  # (p, T) int32 in {-1, 0..3}
     send_local: np.ndarray  # (p, T) bool
@@ -433,9 +436,22 @@ class ExecutionPlan:
 
     n_act_slots: Tuple[int, ...]  # per chunk
     n_grad_slots: Tuple[int, ...]
-    n_res_slots: Tuple[int, ...]
+    n_res_slots: Tuple[int, ...]  # per chunk (heterogeneous-chunk fallback)
     n_wctx_slots: Tuple[int, ...]
+    n_res_slots_joint: int  # cross-chunk shared pool (uniform chunks)
+    n_wctx_slots_joint: int
     n_sink_slots: int
+    n_sink_wctx_slots: int
+
+    # per-tick live-slot counts, replayed from the interval analysis; the
+    # measured-memory model (repro.core.memory.measured_timeline) weights
+    # these by real buffer bytes.
+    res_live: np.ndarray  # (C, p, T)
+    wctx_live: np.ndarray  # (C, p, T)
+    inbox_act_live: np.ndarray  # (C, p, T)
+    inbox_grad_live: np.ndarray  # (C, p, T)
+    sink_live: np.ndarray  # (p, T)
+    sink_wctx_live: np.ndarray  # (p, T)
 
     @property
     def total_ops(self) -> int:
@@ -475,6 +491,9 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
     op_in_slot = np.full(shape, -1, np.int32)
     op_res_slot = np.full(shape, -1, np.int32)
     op_wctx_slot = np.full(shape, -1, np.int32)
+    op_res_slot_joint = np.full(shape, -1, np.int32)
+    op_wctx_slot_joint = np.full(shape, -1, np.int32)
+    op_sink_wctx_slot = np.zeros(shape, np.int32)
     op_is_src = np.zeros(shape, bool)
     op_is_loss = np.zeros(shape, bool)
     op_is_last_b = np.zeros(shape, bool)
@@ -488,30 +507,38 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
     recv_chunk = np.zeros((p, T, N_CHANNELS), np.int32)
     recv_slot = np.zeros((p, T, N_CHANNELS), np.int32)
 
-    # --- residual slots: per (stage, chunk), live [F tick, W tick] (auto
-    # modules rebuild the pullback at W); wctx slots live [B tick, W tick]
-    # and carry only the B pass's extra cotangents -------------------------- #
+    # --- residual slots: per (stage, chunk), live [F tick, B tick] -- the
+    # paper's accounting: B's true input-gradient VJP emits the compact M_W
+    # context and the F->B residual is dead; wctx slots live [B tick, W tick]
+    # and carry the wgrad closure inputs (matmul input activations + upstream
+    # cotangents).  Slots are also allocated *jointly* across chunks per
+    # stage: when the chunks' residual structures agree (the uniform-group
+    # SPMD case) the executor shares one pool, so a stage holding chunk-0 and
+    # chunk-1 residuals at different times does not pay for both peaks. ---- #
     res_slots: Dict[Tuple[int, int, int], int] = {}  # (stage, chunk, mb) -> slot
     wctx_slots: Dict[Tuple[int, int, int], int] = {}  # live [B tick, W tick]
+    res_slots_joint: Dict[Tuple[int, int, int], int] = {}
+    wctx_slots_joint: Dict[Tuple[int, int, int], int] = {}
     n_res_slots = [0] * C
     n_wctx_slots = [0] * C
+
+    def _res_iv(s, c, j):
+        return (
+            tick_of(s, Op(OpKind.F, j, c)),
+            tick_of(s, Op(OpKind.B, j, c)),
+        )
+
+    def _wctx_iv(s, c, j):
+        return (
+            tick_of(s, Op(OpKind.B, j, c)),
+            tick_of(s, Op(OpKind.W, j, c)),
+        )
+
     for c in range(C):
         worst_r = worst_w = 0
         for s in range(p):
-            iv_r = {
-                (s, c, j): (
-                    tick_of(s, Op(OpKind.F, j, c)),
-                    tick_of(s, Op(OpKind.W, j, c)),
-                )
-                for j in range(m)
-            }
-            iv_w = {
-                (s, c, j): (
-                    tick_of(s, Op(OpKind.B, j, c)),
-                    tick_of(s, Op(OpKind.W, j, c)),
-                )
-                for j in range(m)
-            }
+            iv_r = {(s, c, j): _res_iv(s, c, j) for j in range(m)}
+            iv_w = {(s, c, j): _wctx_iv(s, c, j) for j in range(m)}
             alloc_r, nr = _allocate_slots(iv_r)
             alloc_w, nw = _allocate_slots(iv_w)
             res_slots.update(alloc_r)
@@ -521,15 +548,33 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
         n_res_slots[c] = worst_r
         n_wctx_slots[c] = worst_w
 
-    # --- sink (head+loss) residual slots: lifetime [F tick, W tick] at the
-    # loss position of the last chunk ---------------------------------------- #
+    n_res_slots_joint = n_wctx_slots_joint = 0
+    for s in range(p):
+        iv_r = {(s, c, j): _res_iv(s, c, j) for c in range(C) for j in range(m)}
+        iv_w = {(s, c, j): _wctx_iv(s, c, j) for c in range(C) for j in range(m)}
+        alloc_r, nr = _allocate_slots(iv_r)
+        alloc_w, nw = _allocate_slots(iv_w)
+        res_slots_joint.update(alloc_r)
+        wctx_slots_joint.update(alloc_w)
+        n_res_slots_joint = max(n_res_slots_joint, nr)
+        n_wctx_slots_joint = max(n_wctx_slots_joint, nw)
+
+    # --- sink (head+loss) slots at the loss position of the last chunk:
+    # residuals live [F tick, B tick], the sink W-context [B tick, W tick] -- #
     sink_slots: Dict[Tuple[int, int], int] = {}  # (stage, mb) -> slot
-    n_sink_slots = 1
+    sink_wctx_slots: Dict[Tuple[int, int], int] = {}
     c_last = C - 1
     loss_stage = pl.stage_of(c_last, p - 1)
     iv_sink = {
         (loss_stage, j): (
             tick_of(loss_stage, Op(OpKind.F, j, c_last)),
+            tick_of(loss_stage, Op(OpKind.B, j, c_last)),
+        )
+        for j in range(m)
+    }
+    iv_sink_w = {
+        (loss_stage, j): (
+            tick_of(loss_stage, Op(OpKind.B, j, c_last)),
             tick_of(loss_stage, Op(OpKind.W, j, c_last)),
         )
         for j in range(m)
@@ -537,6 +582,9 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
     alloc_s, n_sink = _allocate_slots(iv_sink)
     sink_slots.update(alloc_s)
     n_sink_slots = max(1, n_sink)
+    alloc_sw, n_sink_w = _allocate_slots(iv_sink_w)
+    sink_wctx_slots.update(alloc_sw)
+    n_sink_wctx_slots = max(1, n_sink_w)
 
     # --- inbox slots ------------------------------------------------------ #
     # activation inbox entry for F(c, pos k>0 or chunk>0): live from the tick
@@ -545,6 +593,8 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
     grad_slots: Dict[Tuple[int, int, int], int] = {}
     n_act_slots = [0] * C
     n_grad_slots = [0] * C
+    inbox_act_live = np.zeros((C, p, T), np.int32)
+    inbox_grad_live = np.zeros((C, p, T), np.int32)
     for c in range(C):
         a_worst = g_worst = 0
         for s in range(p):
@@ -572,8 +622,30 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
             grad_slots.update(alloc_g)
             a_worst = max(a_worst, na)
             g_worst = max(g_worst, ng)
+            for (s_, c_, _j), (a, b) in a_iv.items():
+                inbox_act_live[c_, s_, a : b + 1] += 1
+            for (s_, c_, _j), (a, b) in g_iv.items():
+                inbox_grad_live[c_, s_, a : b + 1] += 1
         n_act_slots[c] = a_worst
         n_grad_slots[c] = g_worst
+
+    # --- per-tick live-slot counts (the measured-memory timeline's time
+    # axis: these ARE the executor's alloc/free semantics, replayed) -------- #
+    res_live = np.zeros((C, p, T), np.int32)
+    wctx_live = np.zeros((C, p, T), np.int32)
+    sink_live = np.zeros((p, T), np.int32)
+    sink_wctx_live = np.zeros((p, T), np.int32)
+    for c in range(C):
+        for s in range(p):
+            for j in range(m):
+                a, b = _res_iv(s, c, j)
+                res_live[c, s, a : b + 1] += 1
+                a, b = _wctx_iv(s, c, j)
+                wctx_live[c, s, a : b + 1] += 1
+    for (s_, j), (a, b) in iv_sink.items():
+        sink_live[s_, a : b + 1] += 1
+    for (s_, j), (a, b) in iv_sink_w.items():
+        sink_wctx_live[s_, a : b + 1] += 1
 
     # --- fill per-op tables ------------------------------------------------ #
     for s in range(p):
@@ -585,11 +657,14 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
             op_chunk[s, t] = c
             op_mb[s, t] = j
             op_res_slot[s, t] = res_slots[(s, c, j)]
+            op_res_slot_joint[s, t] = res_slots_joint[(s, c, j)]
             if op.kind in (OpKind.B, OpKind.W):
                 op_wctx_slot[s, t] = wctx_slots[(s, c, j)]
+                op_wctx_slot_joint[s, t] = wctx_slots_joint[(s, c, j)]
             if pl.fwd_next(c, pos) is None:
                 op_is_loss[s, t] = True
                 op_sink_slot[s, t] = sink_slots[(s, j)]
+                op_sink_wctx_slot[s, t] = sink_wctx_slots[(s, j)]
             if pl.fwd_prev(c, pos) is None:
                 op_is_src[s, t] = True
             if op.kind == OpKind.F:
@@ -668,10 +743,13 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
         op_in_slot=op_in_slot,
         op_res_slot=op_res_slot,
         op_wctx_slot=op_wctx_slot,
+        op_res_slot_joint=op_res_slot_joint,
+        op_wctx_slot_joint=op_wctx_slot_joint,
         op_is_src=op_is_src,
         op_is_loss=op_is_loss,
         op_is_last_b=op_is_last_b,
         op_sink_slot=op_sink_slot,
+        op_sink_wctx_slot=op_sink_wctx_slot,
         send_channel=send_channel,
         send_local=send_local,
         local_chunk=local_chunk,
@@ -684,5 +762,14 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
         n_grad_slots=tuple(max(1, n) for n in n_grad_slots),
         n_res_slots=tuple(max(1, n) for n in n_res_slots),
         n_wctx_slots=tuple(max(1, n) for n in n_wctx_slots),
+        n_res_slots_joint=max(1, n_res_slots_joint),
+        n_wctx_slots_joint=max(1, n_wctx_slots_joint),
         n_sink_slots=n_sink_slots,
+        n_sink_wctx_slots=n_sink_wctx_slots,
+        res_live=res_live,
+        wctx_live=wctx_live,
+        inbox_act_live=inbox_act_live,
+        inbox_grad_live=inbox_grad_live,
+        sink_live=sink_live,
+        sink_wctx_live=sink_wctx_live,
     )

@@ -53,6 +53,7 @@ t_comm = 0 (see tests/test_memory.py):
 
 from __future__ import annotations
 
+import functools
 import math
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -389,10 +390,27 @@ def v_flex(
     chunk-0 reserve {1, 2} and drain W-banking {on, off}; returns the
     feasible schedule with the lowest simulated cost (ties: smallest
     W-context backlog).
+
+    Portfolio construction + simulation is memoized per
+    ``(p, m, act_limit, times, compact)`` in an in-process LRU (planner
+    budget sweeps and test grids rebuild the same few schedules dozens of
+    times); each call returns a fresh :class:`Schedule` built from the
+    cached op lists, so callers may mutate ``name`` freely.
     """
-    from ..simulator import TimeModel, simulate
+    from ..simulator import TimeModel
 
     times = times or TimeModel.unit()
+    ops, placement = _v_flex_build(p, m, float(act_limit), times, bool(compact))
+    sched = Schedule(p, m, [list(o) for o in ops], placement=placement, name=name)
+    return sched
+
+
+@functools.lru_cache(maxsize=256)
+def _v_flex_build(
+    p: int, m: int, act_limit: float, times, compact: bool
+) -> Tuple[Tuple[Tuple[Op, ...], ...], Placement]:
+    """Memoized portfolio search; returns immutable (stage_ops, placement)."""
+    from ..simulator import simulate
     cap = int(2 * act_limit)  # chunk passes (2 per full-stage M_B)
     if cap < 2:
         raise ValueError(f"act_limit {act_limit} < 1 M_B cannot run a V chunk pair")
@@ -413,10 +431,7 @@ def v_flex(
                 ]
                 try:
                     candidates.append(
-                        _v_greedy(
-                            p, m, cap, vec,
-                            reserve=reserve, bank_w=bank, name=name,
-                        )
+                        _v_greedy(p, m, cap, vec, reserve=reserve, bank_w=bank)
                     )
                 except RuntimeError:
                     continue
@@ -439,8 +454,10 @@ def v_flex(
         )
     if compact:
         best = _compact_w(best, times)
-    best.name = name
-    return best
+    return (
+        tuple(tuple(ops) for ops in best.stage_ops),
+        best.placement,
+    )
 
 
 def v_min_limit(p: int, m_b: float = 1.0) -> float:

@@ -23,10 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from ..core.executor import PipelineProgram
-from ..core.passes import auto_fbw
+from ..core.passes import FBWModule, auto_fbw
 from .modules import (
     LAYER_KINDS,
     ShardCtx,
+    apply_block,
     apply_layer,
     init_layer,
     pad_to_multiple,
@@ -36,7 +37,14 @@ from .modules import (
 
 PyTree = Any
 
-__all__ = ["ArchConfig", "RunSpec", "build_program", "init_params", "layer_cfg"]
+__all__ = [
+    "ArchConfig",
+    "RunSpec",
+    "ChunkFBW",
+    "build_program",
+    "init_params",
+    "layer_cfg",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,23 +138,84 @@ def group_masks(cfg: ArchConfig, p: int, n_chunks: int, placement) -> "np.ndarra
 
 
 # --------------------------------------------------------------------- #
-# chunk function
+# chunk modules: one split-VJP module per architectural block
 # --------------------------------------------------------------------- #
 def make_chunk_fn(cfg: ArchConfig, p: int, n_chunks: int, ctx: ShardCtx):
+    """Whole-chunk forward (reference path; the executor uses ChunkFBW)."""
     blocks, g = group_layout(cfg, p, n_chunks)
     lcfg = layer_cfg(cfg, ctx.tp_size)
 
     def chunk_fn(params, x, side):
         pos = side["positions"]
         for bi, kinds in enumerate(blocks):
-            mask = params["mask"][bi].astype(x.dtype)
-            xb = x
-            for ki, kind in enumerate(kinds):
-                xb = apply_layer(kind, params["blocks"][bi][ki], xb, pos, lcfg, ctx)
-            x = mask * xb + (1.0 - mask) * x
+            x = apply_block(
+                kinds, params["mask"][bi], params["blocks"][bi], x, pos, lcfg, ctx
+            )
         return x
 
     return chunk_fn, blocks, g
+
+
+class ChunkFBW(FBWModule):
+    """A pipeline chunk as a sequence of per-block split-VJP modules.
+
+    The executor-facing param structure is unchanged (``{"mask": (g,),
+    "blocks": (...)}`` -- checkpoints, sharding rules and the optimizer's
+    mask freeze are untouched); each block module sees the slice
+    ``(mask[bi], blocks[bi])``.  B consumes the block residuals
+    right-to-left and emits one compact M_W context per block (the paper's
+    per-block kept cotangents + wgrad inputs); W reassembles the chunk
+    gradient from those contexts alone.
+    """
+
+    def __init__(self, cfg: ArchConfig, p: int, n_chunks: int, ctx: ShardCtx, name: str):
+        blocks, g = group_layout(cfg, p, n_chunks)
+        lcfg = layer_cfg(cfg, ctx.tp_size)
+        self.name = name
+        self.block_kinds = blocks
+
+        def block_fn(kinds):
+            def f(params, x, side):
+                mask, kp = params
+                return apply_block(kinds, mask, kp, x, side["positions"], lcfg, ctx)
+
+            return f
+
+        self.mods = [
+            auto_fbw(block_fn(kinds), name=f"{name}.b{bi}")
+            for bi, kinds in enumerate(blocks)
+        ]
+
+    @staticmethod
+    def _bp(params, bi):
+        return (params["mask"][bi], params["blocks"][bi])
+
+    def fwd(self, params, x, side):
+        res_all = []
+        for bi, mod in enumerate(self.mods):
+            x, res = mod.fwd(self._bp(params, bi), x, side)
+            res_all.append(res)
+        return x, tuple(res_all)
+
+    def bwd_x(self, params, res, dy, side):
+        wctx_all = [None] * len(self.mods)
+        for bi in reversed(range(len(self.mods))):
+            dy, w = self.mods[bi].bwd_x(self._bp(params, bi), res[bi], dy, side)
+            wctx_all[bi] = w
+        return dy, tuple(wctx_all)
+
+    def bwd_w(self, params, wctx, side, acc=None):
+        outs = []
+        for bi, mod in enumerate(self.mods):
+            a = None if acc is None else (acc["mask"][bi], acc["blocks"][bi])
+            outs.append(mod.bwd_w(self._bp(params, bi), wctx[bi], side, acc=a))
+        return {
+            "mask": jnp.stack([o[0] for o in outs]),
+            "blocks": tuple(o[1] for o in outs),
+        }
+
+    def ensure_traced(self, params, x, side) -> None:
+        jax.eval_shape(lambda p, xx, sd: self.fwd(p, xx, sd), params, x, side)
 
 
 def init_chunk_params(cfg: ArchConfig, key, stage: int, chunk: int, p: int, n_chunks: int, ctx: ShardCtx, masks):
@@ -265,7 +334,6 @@ def make_sink_fn(cfg: ArchConfig, ctx: ShardCtx, m: int):
 # --------------------------------------------------------------------- #
 def build_program(cfg: ArchConfig, spec: RunSpec, placement) -> PipelineProgram:
     ctx = ShardCtx(tp_axis=spec.tp_axis, tp_size=spec.tp_size)
-    chunk_fn, blocks, g = make_chunk_fn(cfg, spec.p, spec.n_chunks, ctx)
     src_fwd, src_bwd_w = make_src(cfg, ctx)
     sink_fn = make_sink_fn(cfg, ctx, spec.m)
 
@@ -276,7 +344,8 @@ def build_program(cfg: ArchConfig, spec: RunSpec, placement) -> PipelineProgram:
         s_total = cfg.extras_dict()["n_patches"] + spec.seq_len
 
     chunks = [
-        auto_fbw(chunk_fn, name=f"{cfg.name}.chunk{c}") for c in range(spec.n_chunks)
+        ChunkFBW(cfg, spec.p, spec.n_chunks, ctx, name=f"{cfg.name}.chunk{c}")
+        for c in range(spec.n_chunks)
     ]
     return PipelineProgram(
         chunks=chunks,

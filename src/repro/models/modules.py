@@ -40,6 +40,7 @@ __all__ = [
     "ShardCtx",
     "init_layer",
     "apply_layer",
+    "apply_block",
     "LAYER_KINDS",
     "rmsnorm",
     "rope",
@@ -714,6 +715,24 @@ def init_layer(kind: str, key, cfg, ctx: ShardCtx, dtype):
 
 def apply_layer(kind: str, params, x, positions, cfg, ctx: ShardCtx):
     return LAYER_KINDS[kind][1](params, x, positions, cfg, ctx)
+
+
+def apply_block(
+    kinds: Tuple[str, ...], mask, params, x, positions, cfg, ctx: ShardCtx
+):
+    """One architectural block (possibly several sub-kinds) with its padding
+    mask folded in: padded blocks are exact no-ops with zero gradients.
+
+    This is the unit the F/B/W split operates on: each block becomes its own
+    split-VJP module (models/lm.py), so B emits a compact per-block M_W
+    context -- the dgrad/wgrad pair of every kind falls out of the backward
+    jaxpr partition in core/passes.py rather than a hand-written table.
+    """
+    xb = x
+    for ki, kind in enumerate(kinds):
+        xb = apply_layer(kind, params[ki], xb, positions, cfg, ctx)
+    m = mask.astype(x.dtype)
+    return m * xb + (1.0 - m) * x
 
 
 # --------------------------------------------------------------------- #

@@ -76,6 +76,7 @@ def replan_under_budget(
     base_times: Optional[TimeModel] = None,
     stage_scale=None,
     tp_size: int = 1,
+    program_factory=None,
 ):
     """Re-plan the schedule when the per-device memory budget changes.
 
@@ -86,8 +87,15 @@ def replan_under_budget(
     (schedule, PlannerDecision).  Raises RuntimeError with the planner's
     report when nothing fits, so the caller can shrink the microbatch or
     spill instead of OOMing mid-run.
+
+    When ``program_factory(n_chunks) -> (program, stage_params, shared,
+    side)`` is supplied (pytrees may be ``ShapeDtypeStruct``; nothing is
+    computed), the chosen plan is additionally validated against *measured*
+    executor buffer bytes (:func:`repro.core.memory.measured_timeline`) --
+    the budget is then enforced on real buffers, not just the analytic
+    model.
     """
-    from ..core.memory import MemoryBudgetPlanner
+    from ..core.memory import MemoryBudgetPlanner, measured_timeline
 
     times = base_times or TimeModel.unit()
     if stage_scale is not None:
@@ -99,6 +107,27 @@ def replan_under_budget(
     decision = planner.plan(budget_bytes)
     if not decision.feasible:
         raise RuntimeError(f"no schedule fits the budget: {decision.summary()}")
+    if program_factory is not None:
+        from ..core.executor import PipelineExecutor
+        from ..core.schedules import compile_plan
+
+        chosen = decision.chosen.schedule
+        program, stage_params, shared, side = program_factory(chosen.n_chunks)
+        exe = PipelineExecutor(program, compile_plan(chosen))
+        mt = measured_timeline(exe, stage_params, shared, side)
+        if mt.alloc_total > budget_bytes:
+            raise RuntimeError(
+                "budget infeasible on measured executor buffers: "
+                f"{decision.chosen.name} allocates {mt.alloc_total/2**20:.0f} "
+                f"MiB > budget {budget_bytes/2**20:.0f} MiB "
+                f"(act {mt.alloc_act/2**20:.0f}, wctx {mt.alloc_wctx/2**20:.0f},"
+                f" inbox {mt.alloc_inbox/2**20:.0f} MiB)"
+            )
+        log.info(
+            "measured executor bytes for %s: %.0f MiB (act %.0f, wctx %.0f)",
+            decision.chosen.name, mt.alloc_total / 2**20,
+            mt.alloc_act / 2**20, mt.alloc_wctx / 2**20,
+        )
     log.info("replanned under budget: %s", decision.summary())
     return decision.chosen.schedule, decision
 

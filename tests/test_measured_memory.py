@@ -1,0 +1,251 @@
+"""Measured-vs-modeled executor memory (ISSUE 2 acceptance).
+
+The tick executor now implements the paper's accounting in real buffers:
+residual slots are live [F, B] (B's true split-VJP emits the compact M_W
+context and frees the activation), W-contexts [B, W], and residual/W-context
+pools are shared across chunks.  These tests cross-check the *measured*
+executor allocation (`PipelineExecutor.buffer_bytes` /
+`core.memory.measured_timeline` -- real pytree leaf bytes x the plan's
+interval analysis) against the analytic `ActivationByteModel` on the tick
+timebase, for 1F1B / ZB-H1 / ZB-V / V-Min / V-Half on tiny configs, and
+assert the V-Min frugality claims PR 1 could only simulate:
+
+  * measured peak activation bytes match the model within 10%;
+  * V-Min's measured activation bytes = (ceil(p/3) + 2) * M_B, i.e.
+    (ceil(p/3)+2)/p of ZB-H1's p * M_B -- 0.625x at p=8 (the +2*M_B term is
+    the V ramp transient; it is why the asymptotic 1/3 reads as 5/8 at
+    p=8);
+  * net of that transient, the steady-state slope is <= 0.40x at p=8 --
+    the paper's ~1/3 claim in measured bytes.
+
+No devices are needed: buffer sizing is abstract (`jax.eval_shape`), and the
+slot pools the executor allocates *are* its peak resident set (greedy
+interval coloring is optimal on interval graphs).  The tier-2 CI job runs
+this module under an 8-fake-device mesh next to the SPMD parity tests.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import PipelineExecutor
+from repro.core.memory import (
+    ActivationByteModel,
+    measured_timeline,
+    measured_unit_bytes,
+    memory_timeline,
+)
+from repro.core.schedules import (
+    compile_plan,
+    one_f_one_b,
+    v_half,
+    v_min,
+    v_min_limit,
+    zb_h1,
+    zb_v,
+)
+from repro.models.lm import ArchConfig, RunSpec, build_program, init_params, side_inputs
+
+# n_layers divisible by p * n_chunks for p in {4, 8}: no padded blocks, so
+# 1-chunk and 2-chunk layouts carry identical real bytes per stage.
+TINY_DENSE = ArchConfig(
+    name="tiny_dense", family="dense", n_layers=16, d_model=16, n_heads=2,
+    n_kv_heads=2, d_ff=32, vocab=64,
+)
+TINY_GQA = ArchConfig(
+    name="tiny_gqa", family="dense", n_layers=16, d_model=16, n_heads=4,
+    n_kv_heads=2, d_ff=48, vocab=64, head_dim=4,
+)
+TINY_RECURRENT = ArchConfig(
+    name="tiny_rec", family="hybrid", n_layers=16, d_model=16, n_heads=2,
+    n_kv_heads=2, d_ff=32, vocab=64,
+    block_pattern=(("rglru", "mlp"),),
+)
+
+SCHEDULES = {
+    "1f1b": (one_f_one_b, 1),
+    "zb-h1": (zb_h1, 1),
+    "zb-v": (zb_v, 2),
+    "v-min": (v_min, 2),
+    "v-half": (v_half, 2),
+}
+
+
+def build_measured(cfg, p, m, sched_name):
+    build, n_chunks = SCHEDULES[sched_name]
+    spec = RunSpec(p=p, n_chunks=n_chunks, microbatch=2, seq_len=8, m=m)
+    sched = build(p, m)
+    plan = compile_plan(sched)
+    prog = build_program(cfg, spec, sched.placement)
+    exe = PipelineExecutor(prog, plan, pipe_axis="pipe")
+    stacked, shared = init_params(cfg, spec, sched.placement)
+    sp = tuple(
+        jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), s
+        )
+        for s in stacked
+    )
+    side = side_inputs(cfg, spec)
+    mt = measured_timeline(exe, sp, shared, side)
+    return sched, exe, mt, (sp, shared, side)
+
+
+GRID = [(4, 8), (8, 16)]
+
+
+@pytest.mark.parametrize("cfg", [TINY_DENSE, TINY_GQA, TINY_RECURRENT],
+                         ids=lambda c: c.name)
+@pytest.mark.parametrize("p,m", GRID)
+@pytest.mark.parametrize("sched_name", list(SCHEDULES))
+def test_measured_matches_model_within_10pct(cfg, p, m, sched_name):
+    sched, exe, mt, _ = build_measured(cfg, p, m, sched_name)
+    m_b, m_w = mt.unit_bytes()
+    model = ActivationByteModel.from_measured(m_b, m_w)
+    act_model, wctx_model, _ = model.schedule_bytes(sched, tick_times=True)
+    assert mt.alloc_act == pytest.approx(act_model, rel=0.10), (
+        f"{sched_name}: measured activation bytes {mt.alloc_act:.0f} vs "
+        f"modeled {act_model:.0f}"
+    )
+    assert mt.alloc_wctx == pytest.approx(wctx_model, rel=0.10), (
+        f"{sched_name}: measured W-context bytes {mt.alloc_wctx:.0f} vs "
+        f"modeled {wctx_model:.0f}"
+    )
+    # static pool allocation == peak of the per-tick live timeline (the
+    # executor's slot pools are sized by optimal interval coloring)
+    assert mt.max_peak_act == pytest.approx(mt.alloc_act, rel=1e-6)
+    # the sink (head + loss) buffers are real and accounted
+    assert mt.alloc_sink > 0
+
+
+@pytest.mark.parametrize("p,m", GRID)
+def test_vmin_measured_frugality_vs_zbh1(p, m):
+    """The V-Min/ZB-H1 ratio in *measured* bytes (PR 1's simulated claim)."""
+    _, _, mt_h1, _ = build_measured(TINY_DENSE, p, m, "zb-h1")
+    _, _, mt_vm, _ = build_measured(TINY_DENSE, p, m, "v-min")
+    m_b, _ = mt_vm.unit_bytes()
+    # units agree between the 1-chunk and 2-chunk layouts (no padding)
+    assert mt_h1.unit_bytes()[0] == pytest.approx(m_b, rel=1e-6)
+
+    # ZB-H1 keeps p in-flight microbatches at stage 0: exactly p * M_B.
+    assert mt_h1.alloc_act == pytest.approx(p * m_b, rel=1e-6)
+    # V-Min realizes its analytic budget ceil(p/3) + 2 in real buffers.
+    limit = v_min_limit(p)
+    assert mt_vm.alloc_act <= limit * m_b * (1 + 1e-6)
+    ratio = mt_vm.alloc_act / mt_h1.alloc_act
+    assert ratio <= limit / p + 1e-6
+
+    # steady-state slope, net of the 2*M_B V-ramp transient: the ~1/3 claim.
+    steady = (mt_vm.alloc_act - 2 * m_b) / mt_h1.alloc_act
+    assert steady <= math.ceil(p / 3) / p + 1e-6
+    if p >= 8:
+        assert ratio <= 0.70  # 0.625 at p=8; seed executor measured 1.5x
+        assert steady <= 0.40  # the paper's 1/3, measured
+
+
+@pytest.mark.parametrize("p,m", GRID)
+def test_measured_family_ordering(p, m):
+    """V-Min <= V-Half <= ZB-V in measured activation bytes."""
+    acts = {}
+    for name in ("v-min", "v-half", "zb-v"):
+        _, _, mt, _ = build_measured(TINY_DENSE, p, m, name)
+        acts[name] = mt.alloc_act
+    assert acts["v-min"] <= acts["v-half"] * (1 + 1e-9)
+    assert acts["v-half"] <= acts["zb-v"] * (1 + 1e-9)
+
+
+def test_wctx_is_smaller_than_full_retention():
+    """M_W < M_B: the split's W-context beats keeping residuals F->W.
+
+    The seed executor retained the full residual set until W; the per-slot
+    W-context the true split emits must be strictly smaller than the
+    residual slot it replaces.
+    """
+    _, _, mt, _ = build_measured(TINY_DENSE, 4, 8, "zb-h1")
+    m_b, m_w = mt.unit_bytes()
+    assert 0 < m_w < m_b
+
+
+def test_analytic_per_kind_table_in_range():
+    """The config-level analytic table stays within 5x of measured units
+    (it is a per-kind heuristic; calibration is ROADMAP work)."""
+    for cfg in (TINY_DENSE, TINY_RECURRENT):
+        _, exe, mt, (sp, shared, side) = build_measured(cfg, 4, 8, "zb-h1")
+        m_b_meas, _ = measured_unit_bytes(exe, sp, shared, side)
+        analytic = ActivationByteModel.from_config(
+            cfg, microbatch=2, seq_len=8, p=4, n_chunks=1
+        )
+        assert 0.2 < analytic.m_b_bytes / m_b_meas < 5.0
+
+
+def test_driver_replan_validates_measured_bytes():
+    """replan_under_budget(program_factory=...) enforces the budget on real
+    executor buffers, not just the analytic model."""
+    from repro.core.memory import MemoryBudgetPlanner
+    from repro.runtime.driver import replan_under_budget
+
+    cfg = TINY_DENSE
+    p, m = 4, 8
+
+    def factory(n_chunks):
+        spec = RunSpec(p=p, n_chunks=n_chunks, microbatch=2, seq_len=8, m=m)
+        pl = (zb_v(p, m) if n_chunks == 2 else one_f_one_b(p, m)).placement
+        prog = build_program(cfg, spec, pl)
+        stacked, shared = init_params(cfg, spec, pl)
+        sp = tuple(
+            jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), s
+            )
+            for s in stacked
+        )
+        return prog, sp, shared, side_inputs(cfg, spec)
+
+    _, _, mt_ref, _ = build_measured(cfg, p, m, "zb-h1")
+
+    # generous budget: passes both the model and the measured validation
+    sched_ok, decision = replan_under_budget(
+        cfg, p=p, m=m, microbatch=2, seq_len=8,
+        budget_bytes=mt_ref.alloc_total * 50,
+        program_factory=factory,
+    )
+    assert decision.feasible
+    sched_ok.validate()
+
+    # a budget the analytic model accepts but real buffers (inbox + sink +
+    # wctx overheads) exceed must be rejected on measured bytes
+    planner = MemoryBudgetPlanner(cfg, p=p, m=m, microbatch=2, seq_len=8)
+    squeezed = min(
+        c.total_bytes for c in planner.candidates() if c.schedule is not None
+    ) + 1.0
+    d2 = planner.plan(squeezed)
+    assert d2.feasible  # the analytic model admits this budget...
+    chosen = d2.chosen.schedule
+    prog2, sp2, shared2, side2 = factory(chosen.n_chunks)
+    exe2 = PipelineExecutor(prog2, compile_plan(chosen), pipe_axis="pipe")
+    mt2 = measured_timeline(exe2, sp2, shared2, side2)
+    # ...but real buffers (inbox + sink + measured act/wctx content) do not:
+    # on this tiny config the analytic per-kind table underestimates ~4x,
+    # so the rejection branch is guaranteed to be exercised
+    assert mt2.alloc_total > squeezed
+    with pytest.raises(RuntimeError, match="measured"):
+        replan_under_budget(
+            cfg, p=p, m=m, microbatch=2, seq_len=8,
+            budget_bytes=squeezed,
+            program_factory=factory,
+        )
+
+
+def test_measured_timeline_consistency():
+    """Timeline series are non-negative, peak where the pools say, and the
+    tick-timebase model agrees with the event model up to the B-transient."""
+    sched, exe, mt, _ = build_measured(TINY_DENSE, 4, 8, "v-min")
+    assert (mt.act_bytes >= 0).all() and (mt.wctx_bytes >= 0).all()
+    m_b, m_w = mt.unit_bytes()
+    tick = memory_timeline(sched, m_b=m_b, m_w=m_w, tick_times=True)
+    event = memory_timeline(sched, m_b=m_b, m_w=m_w)
+    # both models bracket the measured peak within one chunk pass
+    for tl in (tick, event):
+        assert tl.peak_act.max() == pytest.approx(
+            mt.max_peak_act, abs=m_b / sched.n_chunks + 1e-6
+        )

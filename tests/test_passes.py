@@ -36,7 +36,7 @@ def test_auto_fbw_matches_jax_grad():
     y, res = mod.fwd(params, x, side)
     dy = jax.random.normal(jax.random.PRNGKey(2), y.shape)
     dx, wctx = mod.bwd_x(params, res, dy, side)
-    grads = mod.bwd_w(params, res, wctx, side)
+    grads = mod.bwd_w(params, wctx, side)
 
     ref_grads, ref_dx = jax.vjp(lambda p, xx: _mlp_layer(p, xx, side), params, x)[
         1
@@ -66,7 +66,7 @@ def test_auto_fbw_side_inputs_reinjected():
     mod = auto_fbw(f)
     y, res = mod.fwd(params, jnp.ones((2, 4)), side)
     dx, wctx = mod.bwd_x(params, res, jnp.ones_like(y), side)
-    grads = mod.bwd_w(params, res, wctx, side)
+    grads = mod.bwd_w(params, wctx, side)
     np.testing.assert_allclose(dx, jnp.ones((2, 4)) @ params["w"].T)
     np.testing.assert_allclose(grads["w"], ((jnp.ones((2, 4)) + side["bias"]).T) @ jnp.ones((2, 4)))
 
@@ -88,22 +88,24 @@ def test_dce_split_flops():
         dx, _ = mod.bwd_x(p, r, g, {})
         return dx
 
-    def w_only(p, r, g):
-        return mod.bwd_w(p, r, g, {})
+    _, wctx = mod.bwd_x(params, res, dy, {})
+
+    def w_only(p, w):
+        return mod.bwd_w(p, w, {})
 
     def both(p, r, g):
-        dx, wctx = mod.bwd_x(p, r, g, {})
-        return dx, mod.bwd_w(p, r, wctx, {})
+        dx, w = mod.bwd_x(p, r, g, {})
+        return dx, mod.bwd_w(p, w, {})
 
-    def flops(fn):
-        cost = jax.jit(fn).lower(params, res, dy).compile().cost_analysis()
+    def flops(fn, *args):
+        cost = jax.jit(fn).lower(*args).compile().cost_analysis()
         if isinstance(cost, (list, tuple)):  # one dict per device program
             cost = cost[0]
         return cost["flops"]
 
-    fb = flops(b_only)
-    fw = flops(w_only)
-    fboth = flops(both)
+    fb = flops(b_only, params, res, dy)
+    fw = flops(w_only, params, wctx)
+    fboth = flops(both, params, res, dy)
     matmul = 2 * 8 * d * d
     assert fb == pytest.approx(matmul, rel=0.05)
     assert fw == pytest.approx(matmul, rel=0.05)
@@ -119,7 +121,7 @@ def test_sequential_fbw_matches_jax_grad():
     y, res = seq.fwd(params, x, {})
     dy = jnp.ones_like(y)
     dx, wctx = seq.bwd_x(params, res, dy, {})
-    grads = seq.bwd_w(params, res, wctx, {})
+    grads = seq.bwd_w(params, wctx, {})
 
     def full(p, xx):
         out = xx
@@ -143,7 +145,7 @@ def test_cross_jit_boundaries():
     y, res = jax.jit(lambda p, xx: mod.fwd(p, xx, {}))(params, x)
     dy = jnp.ones_like(y)
     dx, wctx = jax.jit(lambda p, r, g: mod.bwd_x(p, r, g, {}))(params, res, dy)
-    grads = jax.jit(lambda p, r, w: mod.bwd_w(p, r, w, {}))(params, res, wctx)
+    grads = jax.jit(lambda p, w: mod.bwd_w(p, w, {}))(params, wctx)
     ref = jax.grad(lambda p: _mlp_layer(p, x, {}).sum())(params)
     for k in params:
         np.testing.assert_allclose(grads[k], ref[k], rtol=1e-5, atol=1e-6)
@@ -166,7 +168,7 @@ def test_property_split_equals_fused(b, d, depth, seed):
     y, res = seq.fwd(params, x, {})
     dy = jax.random.normal(jax.random.PRNGKey(seed + 100), y.shape)
     dx, wctx = seq.bwd_x(params, res, dy, {})
-    grads = seq.bwd_w(params, res, wctx, {})
+    grads = seq.bwd_w(params, wctx, {})
 
     def full(p, xx):
         out = xx

@@ -1,0 +1,195 @@
+"""Split-backward numerical parity per block kind (ISSUE 2 satellite).
+
+For every layer kind reachable from the dry-run shape grid
+(configs/shapes.py enumerates ARCH_IDS; their block patterns cover the kinds
+tested here), the dgrad/wgrad pair produced by the backward-jaxpr partition
+(core/passes.auto_fbw) must reproduce the fused ``jax.vjp`` gradients:
+``bwd_x`` returns the same dx, and ``bwd_w`` -- from the compact M_W context
+alone, residuals freed -- the same parameter grads.  The loss/head sink path
+(final norm + vocab-parallel CE) is covered too, as is the fused
+``acc``-routing through kernels/wgrad_accum.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.passes import auto_fbw
+from repro.models.lm import ArchConfig, make_sink_fn
+from repro.models.modules import ShardCtx, apply_layer, init_layer
+
+jax.config.update("jax_enable_x64", False)
+
+# tolerances per dtype: fp32 kinds are tight; bf16 params lose ~8 bits
+TOL = {"float32": dict(rtol=2e-5, atol=2e-5), "bfloat16": dict(rtol=2e-2, atol=2e-2)}
+
+BASE = dict(
+    d_model=16, n_heads=4, n_kv_heads=2, d_ff=32, n_layers=2, head_dim=4,
+    tp_size=1,
+)
+
+# one tiny config per kind; every kind used by the shape-grid archs appears
+KIND_CFG = {
+    "attn": dict(BASE),
+    "attn_local": dict(BASE, window=4),
+    "mlp": dict(BASE),
+    "mla": dict(BASE, q_lora_rank=8, kv_lora_rank=8, qk_rope_head_dim=4),
+    "moe": dict(BASE, n_experts=4, topk=2, moe_d_ff=16, n_shared_experts=1,
+                capacity=8),
+    "slstm": dict(BASE),
+    "mlstm": dict(BASE),
+    "rglru": dict(BASE, lru_width=16),
+    "encdec": dict(BASE, s_enc=4),
+}
+
+
+def test_kind_coverage_matches_shape_grid():
+    """Every block kind in the configs/shapes.py grid has a parity case."""
+    grid_kinds = {
+        k
+        for arch in ARCH_IDS
+        for kinds in get_config(arch).block_pattern
+        for k in kinds
+    }
+    assert grid_kinds <= set(KIND_CFG), sorted(grid_kinds - set(KIND_CFG))
+
+
+def _block_case(kind, dtype):
+    lcfg = KIND_CFG[kind]
+    ctx = ShardCtx()
+    key = jax.random.PRNGKey(0)
+    params = init_layer(kind, key, lcfg, ctx, dtype)
+    b, s = 2, 8
+    s_total = s + (lcfg["s_enc"] if kind == "encdec" else 0)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (b, s_total, lcfg["d_model"]))
+         * 0.5).astype(dtype)
+    side = {"positions": jnp.arange(s_total)}
+
+    def f(p, xx, sd):
+        return apply_layer(kind, p, xx, sd["positions"], lcfg, ctx)
+
+    return f, params, x, side
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_CFG))
+def test_split_backward_parity(kind):
+    dtype = jnp.float32
+    f, params, x, side = _block_case(kind, dtype)
+    mod = auto_fbw(f, name=kind)
+    y, res = mod.fwd(params, x, side)
+    dy = (jax.random.normal(jax.random.PRNGKey(2), y.shape) * 0.5).astype(y.dtype)
+
+    dx, wctx = mod.bwd_x(params, res, dy, side)
+    grads = mod.bwd_w(params, wctx, side)
+
+    ref_grads, ref_dx = jax.vjp(lambda p, xx: f(p, xx, side), params, x)[1](dy)
+    tol = TOL["float32"]
+    np.testing.assert_allclose(dx, ref_dx, **tol)
+    flat = jax.tree_util.tree_leaves_with_path(grads)
+    flat_ref = jax.tree_util.tree_leaves(ref_grads)
+    for (path, g), rg in zip(flat, flat_ref):
+        np.testing.assert_allclose(
+            g, rg, err_msg=f"{kind}: wgrad mismatch at {jax.tree_util.keystr(path)}",
+            **tol,
+        )
+
+
+def test_split_backward_parity_bf16():
+    """Dtype-sensitive path: bf16 params, per-dtype tolerance."""
+    f, params, x, side = _block_case("mlp", jnp.bfloat16)
+    mod = auto_fbw(f, name="mlp_bf16")
+    y, res = mod.fwd(params, x, side)
+    dy = jnp.ones_like(y)
+    dx, wctx = mod.bwd_x(params, res, dy, side)
+    grads = mod.bwd_w(params, wctx, side)
+    ref_grads, ref_dx = jax.vjp(lambda p, xx: f(p, xx, side), params, x)[1](dy)
+    tol = TOL["bfloat16"]
+    np.testing.assert_allclose(
+        dx.astype(np.float32), ref_dx.astype(np.float32), **tol
+    )
+    for g, rg in zip(
+        jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(ref_grads)
+    ):
+        np.testing.assert_allclose(
+            g.astype(np.float32), rg.astype(np.float32), **tol
+        )
+
+
+def test_sink_split_parity():
+    """Loss/head sink: final norm + vocab-parallel CE, split B/W vs vjp."""
+    cfg = ArchConfig(
+        name="sink_tiny", family="dense", n_layers=2, d_model=16, n_heads=2,
+        n_kv_heads=2, d_ff=32, vocab=64,
+    )
+    ctx = ShardCtx()
+    m = 4
+    sink_fn = make_sink_fn(cfg, ctx, m)
+    key = jax.random.PRNGKey(3)
+    shared = {
+        "embed": jax.random.normal(key, (64, 16)) * 0.02,
+        "head": jax.random.normal(jax.random.fold_in(key, 1), (16, 64)) * 0.02,
+        "final_ln": jnp.zeros((16,)),
+    }
+    b, s = 2, 8
+    y = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 16))
+    side = {
+        "labels": jax.random.randint(jax.random.fold_in(key, 3), (b, s), 0, 64),
+        "positions": jnp.arange(s),
+        "tokens": jax.random.randint(jax.random.fold_in(key, 4), (b, s), 0, 64),
+    }
+    mod = auto_fbw(sink_fn, name="sink")
+    loss, res = mod.fwd(shared, y, side)
+    ones = jnp.ones_like(loss)
+    dy, wctx = mod.bwd_x(shared, res, ones, side)
+    grads = mod.bwd_w(shared, wctx, side)
+    ref_grads, ref_dy = jax.vjp(lambda sh, yy: sink_fn(sh, yy, side), shared, y)[
+        1
+    ](ones)
+    tol = TOL["float32"]
+    np.testing.assert_allclose(dy, ref_dy, **tol)
+    for k in shared:
+        np.testing.assert_allclose(
+            grads[k], ref_grads[k], err_msg=f"sink grad {k}", **tol
+        )
+
+
+def test_wgrad_acc_fusion_routes_through_kernel():
+    """bwd_w(acc=...) returns acc + grads, fusing terminal dW = a^T @ g
+    outer products through kernels/wgrad_accum (fp32 accumulators only)."""
+    f, params, x, side = _block_case("mlp", jnp.float32)
+    mod = auto_fbw(f, name="mlp_acc")
+    y, res = mod.fwd(params, x, side)
+    dy = jnp.ones_like(y)
+    _, wctx = mod.bwd_x(params, res, dy, side)
+    grads = mod.bwd_w(params, wctx, side)
+    acc = jax.tree_util.tree_map(
+        lambda l: jnp.full(l.shape, 0.5, jnp.float32), params
+    )
+    fused = mod.bwd_w(params, wctx, side, acc=acc)
+    plan = mod._split
+    assert any(r is not None for r in plan.wgrad_routes), (
+        "no dW = a^T @ g route matched for the MLP block"
+    )
+    for g, fg in zip(
+        jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(fused)
+    ):
+        np.testing.assert_allclose(fg, 0.5 + g, rtol=2e-5, atol=2e-5)
+
+
+def test_residuals_not_needed_after_b():
+    """The W pass must run from the M_W context alone: poisoning the
+    residual buffers after B changes nothing (true split, no rebuild)."""
+    f, params, x, side = _block_case("attn", jnp.float32)
+    mod = auto_fbw(f, name="attn_poison")
+    y, res = mod.fwd(params, x, side)
+    dy = jnp.ones_like(y)
+    _, wctx = mod.bwd_x(params, res, dy, side)
+    grads = mod.bwd_w(params, wctx, side)
+    del res  # freed at B in the executor; bwd_w cannot touch it by design
+    grads2 = mod.bwd_w(params, wctx, side)
+    for a, b_ in zip(
+        jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(grads2)
+    ):
+        np.testing.assert_array_equal(a, b_)

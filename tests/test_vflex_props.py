@@ -1,0 +1,70 @@
+"""Property tests for the v_flex admission gates and W-bank bounds.
+
+Random ``(p, m, clip level)`` draws must always yield a schedule that (a)
+respects the activation cap the admission gates enforce, (b) is
+deadlock-free, and (c) compiles to an execution plan whose *joint* F->B
+residual pool (what the tick executor actually allocates) stays within the
+cap -- i.e. the byte-level claim holds structurally, not just on the grid
+points the acceptance tests pin.  Runs offline via the seeded hypothesis
+fallback in tests/conftest.py when the real engine is absent.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schedules import compile_plan, v_flex, v_min_limit
+from repro.core.schedules.vflex import (
+    _v_flex_build,
+    _wctx_backlog_peak,
+    activation_peak,
+)
+
+
+@given(
+    p=st.sampled_from([3, 4, 5, 6, 8]),
+    mfac=st.integers(2, 3),
+    clip=st.integers(0, 4),
+)
+@settings(max_examples=12, deadline=None)
+def test_vflex_cap_and_liveness(p, mfac, clip):
+    m = mfac * p
+    limit = v_min_limit(p) + clip  # clip levels from V-Min up to ~ZB-V
+    sched = v_flex(p, m, limit, name=f"v@{limit}")
+
+    # (a) admission gates: the activation cap holds in schedule order
+    assert activation_peak(sched) <= limit + 1e-9
+    # (b) no deadlock: the tick compiler finds a valid order
+    sched.validate()
+    # (c) the executor's joint residual pool realizes the cap in slots
+    plan = compile_plan(sched)
+    assert plan.n_res_slots_joint <= int(2 * limit) + 1
+    # residual slots cannot exceed in-flight microbatches per chunk
+    assert all(n <= m for n in plan.n_res_slots)
+    # (d) W-bank bound: the B->W backlog never exceeds the in-flight set
+    assert _wctx_backlog_peak(sched) <= 2 * m
+
+
+@given(
+    p=st.sampled_from([4, 6]),
+    mfac=st.integers(2, 3),
+)
+@settings(max_examples=6, deadline=None)
+def test_vflex_memoized_rebuilds_are_equal(p, mfac):
+    """The in-process LRU returns structurally identical schedules, and
+    mutating one (e.g. renaming) never leaks into the cache."""
+    m = mfac * p
+    limit = v_min_limit(p)
+    a = v_flex(p, m, limit, name="first")
+    a_ops = [list(ops) for ops in a.stage_ops]
+    a.name = "mutated"
+    a.stage_ops[0].reverse()  # vandalize the returned copy
+    b = v_flex(p, m, limit, name="second")
+    assert b.name == "second"
+    assert [list(ops) for ops in b.stage_ops] == a_ops
+    assert _v_flex_build.cache_info().hits >= 1
+
+
+def test_vflex_infeasible_limit_raises():
+    with pytest.raises((ValueError, RuntimeError)):
+        v_flex(4, 8, 0.4)  # below one V chunk pair
