@@ -1,19 +1,28 @@
-"""Memory-vs-throughput frontier sweep (controllable-memory subsystem).
+"""Memory-vs-throughput frontier sweep (unified HBM planning layer).
 
-For each config, build a :class:`MemoryBudgetPlanner` and sweep an ascending
-per-device byte budget from just below the cheapest plan to comfortably above
-the hungriest one.  At every point record the planner's decision; the
-resulting cost-vs-budget curve must be monotone (more memory never yields a
-slower plan -- guaranteed by the planner's cumulative candidate pool and
-asserted here).
+For each config, build an :class:`repro.core.planner.HBMPlanner` and sweep
+an ascending per-device HBM budget from just below the cheapest plan to
+comfortably above the hungriest one.  At every point record the planner's
+decision and its itemized breakdown (params / optim / act / wctx / inbox /
+sink); the resulting cost-vs-budget curve must be monotone (more memory
+never yields a slower plan -- guaranteed by the planner's cumulative
+candidate pool and asserted here).
+
+``--wall-clock`` additionally *runs* each frontier point: the chosen
+schedule is executed on a fake-device mesh (``p`` host devices) with the
+arch's reduced config, and the measured step time is recorded next to the
+simulated cost -- the end-to-end validation of the frontier the simulator
+can only predict.
 
 Writes ``BENCH_memory_frontier.json``:
 
-  {config: {"m_b_bytes": ..., "points": [
+  {config: {"m_b_bytes": ..., "fixed_bytes": ..., "points": [
       {"budget_bytes", "feasible", "schedule", "cost", "bubble_rate",
-       "total_bytes", "min_required_bytes"}, ...]}}
+       "total_bytes", "min_required_bytes", "breakdown", "wall_s"?}, ...]}}
 
-Usage: python benchmarks/memory_frontier.py [--configs a,b,c] [--points N]
+Usage:
+  python benchmarks/memory_frontier.py [--configs a,b,c] [--points N]
+  python benchmarks/memory_frontier.py --wall-clock --p 4 --m 8 --points 4
 """
 
 import argparse
@@ -23,21 +32,138 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import get_config
-from repro.core.memory import MemoryBudgetPlanner
+
+def _prescan_int(argv, flag, default):
+    for i, a in enumerate(argv):
+        if a == flag and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith(flag + "="):
+            return int(a.split("=", 1)[1])
+    return default
+
+
+# --wall-clock executes schedules on a fake-device mesh; the host device
+# count must be pinned before jax initializes (import side effect).
+# Append to any pre-existing XLA_FLAGS rather than setdefault: dropping the
+# flag would leave device_count()==1 and fail the runner's device check.
+if "--wall-clock" in sys.argv:
+    _flag = (
+        "--xla_force_host_platform_device_count="
+        f"{_prescan_int(sys.argv, '--p', 6)}"
+    )
+    _cur = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _cur:
+        os.environ["XLA_FLAGS"] = f"{_cur} {_flag}".strip()
+
+from repro.configs import get_config, get_reduced
+from repro.core.planner import HBMPlanner
 from repro.core.simulator import TimeModel
 
 DEFAULT_CONFIGS = ["gpt3_1_5b", "gpt3_6_2b", "gemma2_2b"]
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_memory_frontier.json")
 
 
-def sweep(arch: str, p: int, m: int, microbatch: int, seq_len: int, n_points: int):
+class WallClockRunner:
+    """Run a schedule for real on the fake-device mesh (reduced config)."""
+
+    def __init__(self, arch: str, p: int, m: int, seq_len: int = 32, steps: int = 2):
+        import jax
+
+        from repro.launch.mesh import AxisBinding
+
+        self.cfg = get_reduced(arch)
+        self.p, self.m = p, m
+        self.seq_len = seq_len
+        self.steps = steps
+        if jax.device_count() < p:
+            raise RuntimeError(
+                f"--wall-clock needs {p} devices, have {jax.device_count()} "
+                "(XLA_FLAGS was set too late?)"
+            )
+        self.mesh = jax.make_mesh((p,), ("data",))
+        self.binding = AxisBinding(pipe="data", tp=None, dp=None)
+        self._cache = {}
+
+    def step_time(self, sched, key: str) -> float:
+        """``key`` is the *plan* name (unique per dynamic search limit)."""
+        if key in self._cache:
+            return self._cache[key]
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.schedules import compile_plan
+        from repro.data import DataConfig, SyntheticLM
+        from repro.launch.steps import TrainStepConfig, build_train_step
+        from repro.launch.train import side_from_batch
+        from repro.models.lm import RunSpec, init_params
+        from repro.optim import adamw
+
+        cfg = self.cfg
+        spec = RunSpec(
+            p=self.p, n_chunks=sched.n_chunks, microbatch=1,
+            seq_len=self.seq_len, m=self.m,
+        )
+        plan = compile_plan(sched)
+        make, _ = build_train_step(
+            cfg, spec, plan, sched.placement, self.mesh, self.binding,
+            TrainStepConfig(),
+        )
+        stacked, shared = init_params(cfg, spec, sched.placement)
+
+        def zeros_like_state(tree):
+            return jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), tree
+            )
+
+        opt = adamw.AdamWState(
+            t=jnp.zeros((), jnp.int32),
+            m=zeros_like_state(stacked),
+            v=zeros_like_state(stacked),
+        )
+        shared_opt = adamw.AdamWState(
+            t=jnp.zeros((), jnp.int32),
+            m=zeros_like_state(shared),
+            v=zeros_like_state(shared),
+        )
+        data = SyntheticLM(
+            DataConfig(
+                global_batch=spec.m * spec.microbatch,
+                seq_len=spec.seq_len,
+                vocab=cfg.vocab,
+            )
+        )
+        side = side_from_batch(data.batch_at(0), spec, cfg=cfg)
+        step = make(side)
+        state = (stacked, shared, opt, shared_opt)
+        out = step(*state, side)  # compile + warm-up
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(self.steps):
+            t0 = time.perf_counter()
+            out = step(*out[:4], side)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        self._cache[key] = best
+        return best
+
+
+def sweep(
+    arch: str,
+    p: int,
+    m: int,
+    microbatch: int,
+    seq_len: int,
+    n_points: int,
+    wall: "WallClockRunner | None" = None,
+):
     cfg = get_config(arch)
-    planner = MemoryBudgetPlanner(
+    planner = HBMPlanner(
         cfg, p=p, m=m, microbatch=microbatch, seq_len=seq_len,
         times=TimeModel.unit(),
     )
-    # anchor the sweep on the static family's footprints
+    # anchor the sweep on the static family's full HBM footprints
     totals = sorted(
         c.total_bytes for c in planner.candidates() if c.schedule is not None
     )
@@ -48,18 +174,25 @@ def sweep(arch: str, p: int, m: int, microbatch: int, seq_len: int, n_points: in
     prev_cost = None
     for b in budgets:  # ascending: planner pool is cumulative
         d = planner.plan(b)
-        points.append(
-            {
-                "budget_bytes": b,
-                "feasible": d.feasible,
-                "schedule": d.chosen.name if d.feasible else None,
-                "cost": d.chosen.cost if d.feasible else None,
-                "bubble_rate": d.chosen.bubble_rate if d.feasible else None,
-                "total_bytes": d.chosen.total_bytes if d.feasible else None,
-                "min_required_bytes": d.min_required_bytes,
-            }
-        )
+        point = {
+            "budget_bytes": b,
+            "feasible": d.feasible,
+            "schedule": d.chosen.name if d.feasible else None,
+            "cost": d.chosen.cost if d.feasible else None,
+            "bubble_rate": d.chosen.bubble_rate if d.feasible else None,
+            "total_bytes": d.chosen.total_bytes if d.feasible else None,
+            "min_required_bytes": d.min_required_bytes,
+            "breakdown": d.chosen.breakdown.items() if d.feasible else None,
+        }
         print(f"  {arch}: {d.summary()}")
+        if d.feasible and wall is not None:
+            point["wall_s"] = wall.step_time(d.chosen.schedule, d.chosen.name)
+            print(
+                f"  {arch}: wall-clock {d.chosen.name} "
+                f"{point['wall_s'] * 1e3:.0f} ms/step "
+                f"(simulated cost {d.chosen.cost:.1f})"
+            )
+        points.append(point)
         if d.feasible:
             if prev_cost is not None and d.chosen.cost > prev_cost + 1e-6:
                 raise AssertionError(
@@ -67,12 +200,14 @@ def sweep(arch: str, p: int, m: int, microbatch: int, seq_len: int, n_points: in
                     f"({prev_cost} -> {d.chosen.cost} at {b/2**20:.0f} MiB)"
                 )
             prev_cost = d.chosen.cost
+    params, optim = planner.fixed_bytes(1)
     return {
         "p": p,
         "m": m,
         "microbatch": microbatch,
         "seq_len": seq_len,
         "m_b_bytes": planner.bytes_1c.m_b_bytes,
+        "fixed_bytes": {"params": params, "optim": optim},
         "points": points,
     }
 
@@ -85,6 +220,12 @@ def main():
     ap.add_argument("--m", type=int, default=12)
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--seq-len", type=int, default=4096)
+    ap.add_argument(
+        "--wall-clock",
+        action="store_true",
+        help="run each feasible point on a fake-device mesh (reduced arch) "
+        "and record the measured step time next to the simulated cost",
+    )
     ap.add_argument("--out", default=OUT)
     args = ap.parse_args()
 
@@ -92,8 +233,12 @@ def main():
     for arch in args.configs.split(","):
         arch = arch.strip()
         print(f"== {arch} ==")
+        wall = (
+            WallClockRunner(arch, args.p, args.m) if args.wall_clock else None
+        )
         result[arch] = sweep(
-            arch, args.p, args.m, args.microbatch, args.seq_len, args.points
+            arch, args.p, args.m, args.microbatch, args.seq_len, args.points,
+            wall=wall,
         )
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

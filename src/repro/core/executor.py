@@ -144,6 +144,7 @@ class PipelineExecutor:
         tp_axis: Optional[str] = None,
         shard_channels: bool = False,
         fuse_wgrad: bool = True,
+        tp_size: Optional[int] = None,
     ):
         if program.n_chunks() != plan.n_chunks:
             raise ValueError(
@@ -163,6 +164,10 @@ class PipelineExecutor:
         # slice and the consumer all-gathers over the (fast) TP links.
         self.tp_axis = tp_axis
         self.shard_channels = bool(shard_channels and tp_axis is not None)
+        # static TP degree hint for *byte accounting only*: the runtime
+        # channel shape divides seq by psum(1, tp_axis) at trace time, which
+        # abstract sizing cannot see (buffer_bytes / channel_message_bytes)
+        self.tp_size = tp_size
 
     # ------------------------------------------------------------------ #
     def _abstract_state(self, stage_params, shared, side_all):
@@ -263,6 +268,21 @@ class PipelineExecutor:
             n_sink_wctx_slots=plan.n_sink_wctx_slots,
         )
 
+    def channel_message_bytes(self) -> float:
+        """Bytes of one inbox slot (one inter-stage message).
+
+        With ``shard_channels`` each rank carries only its 1/tp seq slice;
+        that division is exact when the constructor got the static
+        ``tp_size`` hint, otherwise the *unsharded* shape is returned --
+        an upper bound, so byte-budget feasibility errs conservative.
+        """
+        full = int(np.prod(self.program.act_shape)) * jnp.dtype(
+            self.program.act_dtype
+        ).itemsize
+        if self.shard_channels and self.tp_size:
+            return float(full) / self.tp_size
+        return float(full)
+
     def buffer_bytes(self, stage_params, shared, side_all):
         """Bytes the executor allocates per device, by buffer family.
 
@@ -289,16 +309,8 @@ class PipelineExecutor:
             wctx_total = sum(
                 n * b for n, b in zip(plan.n_wctx_slots, wctx_slot_bytes)
             )
-        chan_bytes = int(np.prod(self.program.act_shape)) * jnp.dtype(
-            self.program.act_dtype
-        ).itemsize
-        # the inboxes are flat (C, max-slots) buffers (uniform stride for the
-        # flattened slot indexing in the tick body), so allocation is
-        # C * max(slots) per family, not the per-chunk sum
-        C = plan.n_chunks
-        inbox_total = (
-            C * max(plan.n_act_slots) + C * max(plan.n_grad_slots)
-        ) * chan_bytes
+        # flat (C, max-slots) inbox buffers: see ExecutionPlan.inbox_slot_total
+        inbox_total = plan.inbox_slot_total() * self.channel_message_bytes()
         sink_total = plan.n_sink_slots * self._tree_bytes(st["sink"])
         sink_wctx_total = plan.n_sink_wctx_slots * self._tree_bytes(
             st["sink_wctx"]

@@ -32,18 +32,21 @@ Three layers (DESIGN.md Sec. 5):
    slot pools equal the peak of the measured timeline, because greedy
    interval coloring is optimal on interval graphs.
 
-4. :class:`MemoryBudgetPlanner` -- given a config and a per-device byte
-   budget, simulates the whole schedule family {1F1B, interleaved 1F1B,
-   ZB-H1, ZB-H2, ZB-V, V-Half, V-Min, memory-limited auto-search} and
-   returns the fastest plan whose modeled bytes fit, or an explicit
-   infeasibility report with the minimum budget that would fit.
+4. :class:`MemoryBudgetPlanner` -- compatibility adapter over the unified
+   HBM-aware planning layer (:mod:`repro.core.planner`): given a config and
+   a *per-device HBM* byte budget (parameters + ZeRO-1 optimizer state +
+   channel/inbox/sink buffers + schedule memory), searches the whole
+   schedule family {1F1B, interleaved 1F1B, ZB-H1, ZB-H2, ZB-V, V-Half,
+   V-Min, memory-limited auto-search, v_flex portfolio} and returns the
+   fastest plan whose itemized bytes fit, or an explicit infeasibility
+   report with the minimum budget that would fit.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -206,6 +209,10 @@ class ActivationByteModel:
     layers_per_stage: int
     tokens: int
     dtype_bytes: int
+    # per-config XLA scratch fudge, calibrated from a dryrun's
+    # compiled.memory_analysis() (see calibrate_from_dryrun); the unified
+    # planner adds it to every candidate's HBM total.
+    xla_temp_bytes: float = 0.0
 
     @staticmethod
     def from_config(
@@ -298,6 +305,42 @@ class ActivationByteModel:
             layers_per_stage=1,
             tokens=0,
             dtype_bytes=0,
+        )
+
+    def calibrate_from_dryrun(
+        self,
+        memory_analysis,
+        schedule: Optional[Schedule] = None,
+        times: Optional[TimeModel] = None,
+        tick_times: bool = False,
+    ) -> "ActivationByteModel":
+        """Fold a dryrun's ``compiled.memory_analysis()`` into the model.
+
+        The model prices the *schedule* buffers (residuals + W-contexts);
+        XLA additionally holds compiler-managed scratch the analytic table
+        cannot see.  Whatever the compiled temp footprint exceeds the
+        modeled schedule bytes by becomes a per-config additive fudge
+        (``xla_temp_bytes``) that the planner charges against the budget.
+
+        ``memory_analysis`` may be the object ``compiled.memory_analysis()``
+        returns or a dryrun result dict (``temp_size_in_bytes`` /
+        ``bytes_per_device`` keys, see launch/dryrun.py).  With no
+        ``schedule`` the whole temp footprint is taken as the fudge
+        (maximally conservative).
+        """
+        temp = getattr(memory_analysis, "temp_size_in_bytes", None)
+        if temp is None and isinstance(memory_analysis, dict):
+            temp = (
+                memory_analysis.get("temp_size_in_bytes")
+                or memory_analysis.get("bytes_per_device")
+            )
+        if temp is None:
+            return self
+        modeled = 0.0
+        if schedule is not None:
+            modeled = self.schedule_bytes(schedule, times, tick_times)[2]
+        return dataclasses.replace(
+            self, xla_temp_bytes=max(0.0, float(temp) - modeled)
         )
 
 
@@ -393,9 +436,7 @@ def measured_timeline(
     for c in range(C):
         act += plan.res_live[c] * bb["res_slot_bytes"][c]
         wctx += plan.wctx_live[c] * bb["wctx_slot_bytes"][c]
-    chan_bytes = float(
-        np.prod(executor.program.act_shape)
-    ) * np.dtype(executor.program.act_dtype).itemsize
+    chan_bytes = executor.channel_message_bytes()
     inbox = (
         plan.inbox_act_live.sum(axis=0) + plan.inbox_grad_live.sum(axis=0)
     ) * chan_bytes
@@ -460,16 +501,17 @@ class PlannerDecision:
 
 
 class MemoryBudgetPlanner:
-    """Pick the fastest schedule whose modeled schedule memory fits a budget.
+    """Pick the fastest schedule whose per-device HBM footprint fits a budget.
 
-    Feasibility is judged on the *total* schedule footprint -- peak of live
-    activation plus W-context bytes -- not activations alone.
-
-    The candidate family covers the whole memory/throughput frontier: 1F1B
-    (p * M_B, fused backward), interleaved 1F1B, ZB-H1 (p * M_B, split),
-    ZB-H2 (~2p * M_B, zero bubble), ZB-V (p * M_B, zero bubble at unit
-    times), V-Half (~p/2), V-Min (~p/3), and the Sec.-3.1 auto-search run
-    at the budget-implied memory limit.
+    Compatibility adapter over the unified planning layer
+    (:class:`repro.core.planner.HBMPlanner`): since the planner refactor the
+    budget is a true per-device HBM budget -- parameters, ZeRO-1-sharded
+    optimizer state, channel/inbox/sink buffers and the XLA-temp fudge are
+    charged on top of the schedule's activation + W-context bytes.  The
+    candidate family additionally includes the ``v_flex`` portfolio at the
+    budget-implied limit.  ``CandidatePlan.total_bytes`` is the itemized
+    HBM total; the full breakdown lives on the underlying
+    :class:`~repro.core.planner.PipelinePlan` (``.hbm``).
     """
 
     def __init__(
@@ -481,136 +523,71 @@ class MemoryBudgetPlanner:
         seq_len: int,
         times: Optional[TimeModel] = None,
         tp_size: int = 1,
+        dp_size: int = 1,
+        measured: bool = False,
+        xla_temp_bytes: float = 0.0,
+        program_factory=None,
     ):
+        from .planner import HBMPlanner
+
         self.cfg = cfg
         self.p = p
         self.m = m
         self.times = times or TimeModel.unit()
-        self.bytes_1c = ActivationByteModel.from_config(
-            cfg, microbatch, seq_len, p, n_chunks=1, tp_size=tp_size
+        self.hbm = HBMPlanner(
+            cfg,
+            p=p,
+            m=m,
+            microbatch=microbatch,
+            seq_len=seq_len,
+            times=self.times,
+            tp_size=tp_size,
+            dp_size=dp_size,
+            measured=measured,
+            xla_temp_bytes=xla_temp_bytes,
+            program_factory=program_factory,
         )
-        self.bytes_2c = ActivationByteModel.from_config(
-            cfg, microbatch, seq_len, p, n_chunks=2, tp_size=tp_size
-        )
-        self._candidates: Optional[List[CandidatePlan]] = None
-        # auto-search results keyed by rounded memory limit; cumulative, so an
-        # ascending budget sweep keeps every cheaper plan in the pool and the
-        # cost-vs-budget frontier stays monotone.
-        self._auto_cache: Dict[float, CandidatePlan] = {}
+        self.bytes_1c = self.hbm.bytes_1c
+        self.bytes_2c = self.hbm.bytes_2c
 
     # ------------------------------------------------------------------ #
-    def _evaluate(self, name, build, byte_model, grouped_w=False, note=""):
-        try:
-            sched = build()
-        except (ValueError, RuntimeError) as e:
+    def _to_candidate(self, pp) -> CandidatePlan:
+        if pp.schedule is None:
             return CandidatePlan(
-                name, None, float("inf"), 1.0, float("inf"), float("inf"),
-                float("inf"), float("inf"), float("inf"), False,
-                note=f"build failed: {e}",
+                pp.name, None, float("inf"), 1.0, float("inf"), float("inf"),
+                float("inf"), float("inf"), float("inf"), False, note=pp.note,
             )
-        times = (
-            dataclasses.replace(self.times, grouped_w=True)
-            if grouped_w
-            else self.times
-        )
-        res = simulate(sched, times)
-        tl = memory_timeline(sched, times, m_b=1.0, m_w=1.0)
-        act_u = float(tl.peak_act.max())
-        wctx_u = float(tl.peak_wctx.max())
-        act_b, wctx_b, total_b = byte_model.timeline_bytes(tl)
+        bd = pp.breakdown
+        m_b = pp.byte_model.m_b_bytes or 1.0
+        m_w = pp.byte_model.m_w_bytes or 1.0
         return CandidatePlan(
-            name=name,
-            schedule=sched,
-            cost=res.cost,
-            bubble_rate=res.bubble_rate,
-            peak_act_units=act_u,
-            peak_wctx_units=wctx_u,
-            act_bytes=act_b,
-            wctx_bytes=wctx_b,
-            total_bytes=total_b,
-            feasible=True,  # byte-feasibility decided against a budget later
-            note=note,
+            name=pp.name,
+            schedule=pp.schedule,
+            cost=pp.cost,
+            bubble_rate=pp.bubble_rate,
+            peak_act_units=bd.act / m_b,
+            peak_wctx_units=bd.wctx / m_w,
+            act_bytes=bd.act,
+            wctx_bytes=bd.wctx,
+            total_bytes=bd.total,
+            feasible=pp.fits,
+            note=pp.note,
         )
 
     def candidates(self, budget_bytes: Optional[float] = None) -> List[CandidatePlan]:
-        """Evaluate the full family (cached), plus a budget-tuned auto search."""
-        from .schedules import (
-            interleaved_1f1b,
-            one_f_one_b,
-            search,
-            v_half,
-            v_min,
-            zb_h1,
-            zb_h2,
-            zb_v,
-        )
-
-        p, m = self.p, self.m
-        if self._candidates is None:
-            cands = [
-                self._evaluate(
-                    "1f1b", lambda: one_f_one_b(p, m), self.bytes_1c,
-                    grouped_w=True, note="fused backward",
-                ),
-                self._evaluate("zb-h1", lambda: zb_h1(p, m), self.bytes_1c),
-                self._evaluate("zb-h2", lambda: zb_h2(p, m), self.bytes_1c),
-                self._evaluate(
-                    "zb-v", lambda: zb_v(p, m, times=self.times), self.bytes_2c
-                ),
-                self._evaluate(
-                    "v-half", lambda: v_half(p, m, times=self.times), self.bytes_2c
-                ),
-                self._evaluate(
-                    "v-min", lambda: v_min(p, m, times=self.times), self.bytes_2c
-                ),
-            ]
-            if m % p == 0:
-                cands.append(
-                    self._evaluate(
-                        "1f1b-interleaved",
-                        lambda: interleaved_1f1b(p, m, v=2),
-                        self.bytes_2c,
-                        grouped_w=True,
-                        note="fused backward",
-                    )
-                )
-            self._candidates = cands
-        if budget_bytes is not None and self.bytes_1c.m_b_bytes > 0:
-            limit_units = round(budget_bytes / self.bytes_1c.m_b_bytes, 1)
-            if limit_units >= 1.0 and limit_units not in self._auto_cache:
-                self._auto_cache[limit_units] = self._evaluate(
-                    f"zb-auto@{limit_units:.1f}Mb",
-                    lambda: search(p, m, self.times, m_limit=limit_units).schedule,
-                    self.bytes_1c,
-                    note="Sec.-3.1 heuristic at the budget-implied limit",
-                )
-        return list(self._candidates) + list(self._auto_cache.values())
+        """Evaluate the full family (cached), plus budget-tuned searches."""
+        return [self._to_candidate(pp) for pp in self.hbm.candidates(budget_bytes)]
 
     def plan(self, budget_bytes: float) -> PlannerDecision:
-        cands = []
-        for c in self.candidates(budget_bytes):
-            if c.schedule is None:
-                cands.append(c)
-                continue
-            cands.append(
-                dataclasses.replace(c, feasible=c.total_bytes <= budget_bytes)
-            )
-        feasible = [c for c in cands if c.feasible]
-        finite = [c for c in cands if c.schedule is not None]
-        min_required = min((c.total_bytes for c in finite), default=float("inf"))
-        if not feasible:
-            return PlannerDecision(
-                budget_bytes=budget_bytes,
-                feasible=False,
-                chosen=None,
-                candidates=cands,
-                min_required_bytes=min_required,
-            )
-        best = min(feasible, key=lambda c: (c.cost, c.total_bytes))
+        report = self.hbm.plan(budget_bytes)
+        cands = [self._to_candidate(pp) for pp in report.plans]
+        chosen = None
+        if report.chosen is not None:
+            chosen = next(c for c in cands if c.name == report.chosen.name)
         return PlannerDecision(
             budget_bytes=budget_bytes,
-            feasible=True,
-            chosen=best,
+            feasible=report.feasible,
+            chosen=chosen,
             candidates=cands,
-            min_required_bytes=min_required,
+            min_required_bytes=report.min_required_bytes,
         )

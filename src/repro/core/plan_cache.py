@@ -1,0 +1,146 @@
+"""Content-keyed on-disk plan cache (JSON) + schedule (de)serialization.
+
+Schedule search is pure planning -- the result depends only on the search
+inputs -- so it is cached across *processes*, not just in-process: the
+``v_flex`` portfolio (keyed ``(p, m, act_limit, times, compact)``) and the
+unified planner's decisions (additionally keyed by the HBM budget and the
+config content) are written as small JSON files under one cache directory.
+A budget sweep re-run in a fresh process, a CI shard, or a second launcher
+replays the stored plan instead of re-searching.
+
+Keys are content hashes: every key field is canonicalized to JSON
+(dataclasses included, ``TimeModel`` via :func:`times_payload`) and hashed,
+so two processes agree on the key iff they agree on the *content* of the
+inputs.  Values are self-contained: a serialized :class:`Schedule` (op
+lists + placement) plus arbitrary JSON metadata, enough to reconstruct an
+identical plan without re-running the search.
+
+Location: ``$REPRO_PLAN_CACHE_DIR`` when set (``0``/``off`` disables
+caching entirely), else ``~/.cache/repro-zb/plans``.  Writes are atomic
+(tmp + rename); a corrupt or unreadable entry is treated as a miss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+from .schedules.ir import Op, OpKind, Placement, Schedule
+
+__all__ = [
+    "PlanCache",
+    "default_cache",
+    "times_payload",
+    "schedule_to_payload",
+    "schedule_from_payload",
+]
+
+_ENV = "REPRO_PLAN_CACHE_DIR"
+_VERSION = 1  # bump to invalidate every stored entry on format changes
+
+
+def times_payload(times) -> Any:
+    """Canonical JSON value for a TimeModel (or None)."""
+    if times is None:
+        return None
+    d = dataclasses.asdict(times)
+    if d.get("stage_scale") is not None:
+        d["stage_scale"] = list(d["stage_scale"])
+    return d
+
+
+def schedule_to_payload(schedule: Schedule) -> Dict[str, Any]:
+    return {
+        "p": schedule.p,
+        "m": schedule.m,
+        "name": schedule.name,
+        "placement": [list(seq) for seq in schedule.placement.stage_seq],
+        "stage_ops": [
+            [[int(op.kind), op.mb, op.chunk] for op in ops]
+            for ops in schedule.stage_ops
+        ],
+    }
+
+
+def schedule_from_payload(payload: Dict[str, Any]) -> Schedule:
+    placement = Placement(tuple(tuple(seq) for seq in payload["placement"]))
+    stage_ops = [
+        [Op(OpKind(k), mb, chunk) for k, mb, chunk in ops]
+        for ops in payload["stage_ops"]
+    ]
+    return Schedule(
+        payload["p"],
+        payload["m"],
+        stage_ops,
+        placement=placement,
+        name=payload.get("name", "cached"),
+    )
+
+
+def _canonical(value: Any) -> Any:
+    """JSON-serializable canonical form of a key field."""
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        return _canonical(dataclasses.asdict(value))
+    if isinstance(value, dict):
+        return {str(k): _canonical(v) for k, v in sorted(value.items())}
+    if isinstance(value, (list, tuple)):
+        return [_canonical(v) for v in value]
+    if isinstance(value, float) and value in (float("inf"), float("-inf")):
+        return repr(value)
+    return value
+
+
+class PlanCache:
+    """Tiny content-addressed JSON store: key(**fields) -> get/put."""
+
+    def __init__(self, cache_dir: Optional[str] = None, enabled: bool = True):
+        self.cache_dir = cache_dir
+        self.enabled = enabled and cache_dir is not None
+
+    @staticmethod
+    def key(kind: str, **fields) -> str:
+        blob = json.dumps(
+            {"version": _VERSION, "kind": kind, **_canonical(fields)},
+            sort_keys=True,
+        )
+        return f"{kind}-{hashlib.sha256(blob.encode()).hexdigest()[:24]}"
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"{key}.json")
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        if not self.enabled:
+            return None
+        try:
+            with open(self._path(key)) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def put(self, key: str, payload: Dict[str, Any]) -> None:
+        if not self.enabled:
+            return
+        try:
+            os.makedirs(self.cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=self.cache_dir, prefix=f".{key}.", suffix=".tmp"
+            )
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, self._path(key))
+        except OSError:
+            pass  # caching is best-effort; planning proceeds uncached
+
+
+def default_cache() -> PlanCache:
+    """The process-default cache honoring ``$REPRO_PLAN_CACHE_DIR``."""
+    env = os.environ.get(_ENV)
+    if env is not None:
+        if env.strip().lower() in ("", "0", "off", "none", "disabled"):
+            return PlanCache(None, enabled=False)
+        return PlanCache(env)
+    return PlanCache(os.path.join(os.path.expanduser("~"), ".cache", "repro-zb", "plans"))

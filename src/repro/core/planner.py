@@ -1,0 +1,767 @@
+"""Unified HBM-aware planning layer (DESIGN.md Sec. 6).
+
+One ``plan()`` across every schedule family, under a true per-device HBM
+budget.  The paper's automatic scheduler (Sec. 3) and the
+controllable-memory follow-up (arXiv 2405.15362) both pick a schedule from
+a model config and a *memory limit*; here that limit is the device's whole
+HBM, itemized per device as
+
+  * **params**    -- this stage's chunk parameters (pipe- and tp-sharded)
+                     plus the replicated shared params (embedding, head);
+  * **optim**     -- AdamW moments (fp32 m+v) under ZeRO-1 sharding over
+                     the dp axis (``optim/sharding.py`` padding rules);
+  * **act**       -- peak live F->B residual bytes (the paper's M_B term);
+  * **wctx**      -- peak live B->W split-backward contexts (M_W);
+  * **inbox**     -- the executor's collective-permute channel inboxes;
+  * **sink**      -- head+loss residuals and contexts at the loss stage;
+  * **xla_temp**  -- per-config fudge calibrated from a dryrun's
+                     ``compiled.memory_analysis()``
+                     (:meth:`ActivationByteModel.calibrate_from_dryrun`).
+
+Two fidelities share one code path: the *model* fidelity prices act/wctx
+with :class:`ActivationByteModel` and the inbox/sink with the compiled
+plan's slot counts, needing no program; the *measured* fidelity reads the
+tick executor's real buffer allocation (``PipelineExecutor.buffer_bytes``)
+so feasibility is judged on the bytes the device will actually hold.
+
+The candidate pool spans every schedule family in the repo -- 1F1B,
+interleaved 1F1B, ZB-H1, ZB-H2, ZB-V, V-Min, V-Half, the Sec.-3.1
+auto-greedy grid at the budget-implied limit, and the ``v_flex`` portfolio
+(via ``auto.search(placement="v_flex")``).  Budget-implied searches are
+cached cumulatively, so an ascending budget sweep keeps every cheaper plan
+in the pool and the cost-vs-budget frontier is monotone.
+
+``plan()`` results and the underlying ``v_flex`` portfolio are persisted
+in the content-keyed on-disk cache (:mod:`repro.core.plan_cache`), so
+cross-process sweeps replay instead of re-searching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .memory import ActivationByteModel, memory_timeline
+from .plan_cache import (
+    PlanCache,
+    default_cache,
+    schedule_from_payload,
+    schedule_to_payload,
+    times_payload,
+)
+from .schedules.ir import Placement, Schedule, compile_plan
+from .simulator import TimeModel, simulate
+
+__all__ = [
+    "HBMBreakdown",
+    "PipelinePlan",
+    "PlanReport",
+    "HBMPlanner",
+    "plan",
+    "fastest_under_profile",
+]
+
+_INF = float("inf")
+
+# beyond ~2p*M_B extra schedule memory buys no bubble (paper Sec. 5: ZB-2p
+# is already ~zero bubble), so budget-implied search limits clamp there.
+_LIMIT_CAP_FACTOR = 2.0
+
+
+# --------------------------------------------------------------------- #
+# itemized per-device HBM breakdown
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class HBMBreakdown:
+    """Per-device bytes, itemized; ``total`` is the budget-facing sum."""
+
+    params: float = 0.0
+    optim: float = 0.0
+    act: float = 0.0
+    wctx: float = 0.0
+    inbox: float = 0.0
+    sink: float = 0.0
+    xla_temp: float = 0.0
+
+    def items(self) -> Dict[str, float]:
+        return {
+            "params": self.params,
+            "optim": self.optim,
+            "act": self.act,
+            "wctx": self.wctx,
+            "inbox": self.inbox,
+            "sink": self.sink,
+            "xla_temp": self.xla_temp,
+        }
+
+    @property
+    def schedule_bytes(self) -> float:
+        """The schedule-dependent share (everything but params/optim/temp)."""
+        return self.act + self.wctx + self.inbox + self.sink
+
+    @property
+    def total(self) -> float:
+        return sum(self.items().values())
+
+    def binding_term(self) -> str:
+        """Name of the largest term -- what a bigger budget must pay for."""
+        return max(self.items().items(), key=lambda kv: kv[1])[0]
+
+    def report(self, indent: str = "  ") -> str:
+        lines = [
+            f"{indent}{k:<8s} {v / 2**20:10.1f} MiB"
+            for k, v in self.items().items()
+            if v > 0
+        ]
+        lines.append(f"{indent}{'total':<8s} {self.total / 2**20:10.1f} MiB")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class PipelinePlan:
+    """One evaluated candidate: schedule + byte model + cost + breakdown."""
+
+    name: str
+    schedule: Optional[Schedule]
+    placement: Optional[Placement]
+    byte_model: Optional[ActivationByteModel]
+    cost: float
+    bubble_rate: float
+    breakdown: Optional[HBMBreakdown]
+    fits: bool
+    note: str = ""
+
+    @property
+    def total_bytes(self) -> float:
+        return self.breakdown.total if self.breakdown is not None else _INF
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """``plan()``'s answer: the chosen plan or an itemized infeasibility."""
+
+    budget_bytes: float
+    feasible: bool
+    chosen: Optional[PipelinePlan]
+    plans: List[PipelinePlan]
+    min_required_bytes: float
+    from_cache: bool = False
+
+    def summary(self) -> str:
+        if self.feasible:
+            c = self.chosen
+            return (
+                f"budget {self.budget_bytes / 2**20:.0f} MiB -> {c.name} "
+                f"(cost {c.cost:.1f}, bubble {c.bubble_rate:.3f}, "
+                f"{c.total_bytes / 2**20:.0f} MiB HBM)"
+            )
+        return (
+            f"budget {self.budget_bytes / 2**20:.0f} MiB infeasible; "
+            f"cheapest plan needs {self.min_required_bytes / 2**20:.0f} MiB"
+        )
+
+    def infeasibility_report(self) -> str:
+        """Itemized report for the smallest-footprint plan, naming the
+        binding term -- what the budget must grow (or the model shrink) by."""
+        finite = [p for p in self.plans if p.schedule is not None]
+        if not finite:
+            return "no candidate schedule could be built"
+        cheapest = min(finite, key=lambda p: p.total_bytes)
+        bd = cheapest.breakdown
+        short = cheapest.total_bytes - self.budget_bytes
+        return (
+            f"budget {self.budget_bytes / 2**20:.1f} MiB infeasible: "
+            f"cheapest plan {cheapest.name} needs "
+            f"{cheapest.total_bytes / 2**20:.1f} MiB "
+            f"({short / 2**20:.1f} MiB short); binding term: "
+            f"{bd.binding_term()}\n{bd.report()}"
+        )
+
+
+# --------------------------------------------------------------------- #
+# parameter + optimizer byte accounting
+# --------------------------------------------------------------------- #
+def _strip_stage_axis(stacked):
+    """Per-stage param shapes from the (p, ...)-stacked global tree."""
+    import jax
+
+    return tuple(
+        jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), chunk
+        )
+        for chunk in stacked
+    )
+
+
+def _tree_bytes(tree) -> float:
+    from .executor import PipelineExecutor
+
+    # single source of truth for leaf-byte accounting (planner fixed-state
+    # bytes must never drift from the executor's measured bytes)
+    return float(PipelineExecutor._tree_bytes(tree))
+
+
+def fixed_state_bytes(
+    cfg, p: int, n_chunks: int, tp_size: int = 1, dp_size: int = 1
+) -> Tuple[float, float]:
+    """(param_bytes, optimizer_bytes) per device, from abstract init.
+
+    Parameters are shape-evaluated through the real ``init_params`` (so
+    padded groups, masks, and per-family extras are priced exactly), then
+    pipe-sharded (one stage per device) and tp-divided (Megatron weight
+    sharding; exact at tp=1, proportional otherwise).  Optimizer moments
+    are ZeRO-1 sharded over the dp axis with ``optim/sharding.py``'s
+    padding rule.
+    """
+    import jax
+
+    from ..models.lm import RunSpec, init_params
+    from ..optim.sharding import zero1_state_bytes
+
+    spec = RunSpec(
+        p=p, n_chunks=n_chunks, microbatch=1, seq_len=8, m=1, tp_size=tp_size
+    )
+    # any placement with the right chunk count works: init_params leaf
+    # shapes depend only on (cfg, p, n_chunks); placement moves mask values
+    # between stages, never changes a shape
+    placement = (
+        Placement.vshape(p) if n_chunks == 2 else Placement.linear(p, n_chunks)
+    )
+    stacked, shared = jax.eval_shape(lambda: init_params(cfg, spec, placement))
+    per_stage = _strip_stage_axis(stacked)
+    param_bytes = (_tree_bytes(per_stage) + _tree_bytes(shared)) / max(1, tp_size)
+    optim_bytes = (
+        zero1_state_bytes(per_stage, dp_size)
+        + zero1_state_bytes(shared, dp_size)
+    ) / max(1, tp_size)
+    return param_bytes, optim_bytes
+
+
+# --------------------------------------------------------------------- #
+# the planner
+# --------------------------------------------------------------------- #
+class HBMPlanner:
+    """Search all schedule families under a per-device HBM byte budget.
+
+    Stateful on purpose: the static family is evaluated once, and
+    budget-implied searches (auto-greedy grid, v_flex portfolio) accumulate
+    across ``plan()`` calls so an ascending budget sweep never loses a
+    cheaper plan (monotone cost-vs-budget frontier).
+    """
+
+    def __init__(
+        self,
+        cfg,
+        p: int,
+        m: int,
+        microbatch: int,
+        seq_len: int,
+        times: Optional[TimeModel] = None,
+        tp_size: int = 1,
+        dp_size: int = 1,
+        measured: bool = False,
+        xla_temp_bytes: float = 0.0,
+        program_factory: Optional[Callable] = None,
+    ):
+        self.cfg = cfg
+        self.p = p
+        self.m = m
+        self.microbatch = microbatch
+        self.seq_len = seq_len
+        self.times = times or TimeModel.unit()
+        self.tp_size = tp_size
+        self.dp_size = dp_size
+        self.measured = measured
+        self.xla_temp_bytes = float(xla_temp_bytes)
+        self.program_factory = program_factory
+        self.bytes_1c = ActivationByteModel.from_config(
+            cfg, microbatch, seq_len, p, n_chunks=1, tp_size=tp_size
+        )
+        self.bytes_2c = ActivationByteModel.from_config(
+            cfg, microbatch, seq_len, p, n_chunks=2, tp_size=tp_size
+        )
+        self._static: Optional[List[PipelinePlan]] = None
+        self._dynamic: Dict[str, PipelinePlan] = {}
+        self._fixed: Dict[int, Tuple[float, float]] = {}
+        self._programs: Dict[int, Tuple] = {}
+
+    # -- fixed (schedule-independent) state ---------------------------- #
+    def fixed_bytes(self, n_chunks: int) -> Tuple[float, float]:
+        if n_chunks not in self._fixed:
+            self._fixed[n_chunks] = fixed_state_bytes(
+                self.cfg, self.p, n_chunks, self.tp_size, self.dp_size
+            )
+        return self._fixed[n_chunks]
+
+    # -- measured fidelity: one abstract program per chunk count -------- #
+    # Keyed on n_chunks alone on purpose: chunk modules (ChunkFBW), the
+    # sink, and all buffer *shapes* depend only on (cfg, p, n_chunks) --
+    # placement changes which stage holds which mask values, never a leaf
+    # shape -- so a V-shape and a linear 2-chunk schedule price identically
+    # and can share one abstract program.
+    def _program(self, n_chunks: int, placement: Placement):
+        if n_chunks not in self._programs:
+            if self.program_factory is not None:
+                self._programs[n_chunks] = self.program_factory(n_chunks)
+            else:
+                import jax
+
+                from ..models.lm import (
+                    RunSpec,
+                    build_program,
+                    init_params,
+                    side_inputs,
+                )
+
+                spec = RunSpec(
+                    p=self.p,
+                    n_chunks=n_chunks,
+                    microbatch=self.microbatch,
+                    seq_len=self.seq_len,
+                    m=self.m,
+                    tp_size=self.tp_size,
+                )
+                prog = build_program(self.cfg, spec, placement)
+                stacked, shared = jax.eval_shape(
+                    lambda: init_params(self.cfg, spec, placement)
+                )
+                side = jax.eval_shape(lambda: side_inputs(self.cfg, spec))
+                self._programs[n_chunks] = (
+                    prog,
+                    _strip_stage_axis(stacked),
+                    shared,
+                    side,
+                )
+        return self._programs[n_chunks]
+
+    # -- analytic inbox/sink estimates (model fidelity) ------------------ #
+    def _act_msg_bytes(self) -> float:
+        cfg = self.cfg
+        s_total = self.seq_len
+        ex = cfg.extras_dict()
+        if cfg.family == "encdec":
+            s_total += ex["s_enc"]
+        elif cfg.family == "vlm":
+            s_total += ex["n_patches"]
+        dtype_bytes = self.bytes_1c.dtype_bytes or 4
+        return float(self.microbatch * s_total * cfg.d_model * dtype_bytes)
+
+    def _sink_slot_bytes(self) -> Tuple[float, float]:
+        """(sink residual, sink W-context) rough per-slot estimate: the
+        normed activations plus tp-sharded logits at the loss position."""
+        cfg = self.cfg
+        tokens = self.microbatch * self.seq_len
+        dtype_bytes = self.bytes_1c.dtype_bytes or 4
+        res = tokens * (
+            2 * cfg.d_model * dtype_bytes
+            + cfg.vocab / max(1, self.tp_size) * dtype_bytes
+        )
+        wctx = tokens * 2 * cfg.d_model * dtype_bytes
+        return float(res), float(wctx)
+
+    # -- candidate evaluation -------------------------------------------- #
+    def _evaluate(
+        self,
+        name: str,
+        build: Callable[[], Schedule],
+        n_chunks: int,
+        grouped_w: bool = False,
+        note: str = "",
+    ) -> PipelinePlan:
+        byte_model = self.bytes_1c if n_chunks == 1 else self.bytes_2c
+        try:
+            sched = build()
+        except (ValueError, RuntimeError) as e:
+            return PipelinePlan(
+                name, None, None, byte_model, _INF, 1.0, None, False,
+                note=f"build failed: {e}",
+            )
+        sched.name = name  # unique plan name (e.g. "zb-auto@8.0Mb"), not the
+        # builder's internal default -- downstream consumers key on it
+        times = (
+            dataclasses.replace(self.times, grouped_w=True)
+            if grouped_w
+            else self.times
+        )
+        res = simulate(sched, times)
+        params, optim = self.fixed_bytes(sched.n_chunks)
+        ep = compile_plan(sched)
+        if self.measured:
+            from .executor import PipelineExecutor
+
+            prog, sp, shared, side = self._program(
+                sched.n_chunks, sched.placement
+            )
+            exe = PipelineExecutor(prog, ep, pipe_axis="pipe")
+            bb = exe.buffer_bytes(sp, shared, side)
+            act_b, wctx_b = bb["res"], bb["wctx"]
+            inbox_b = bb["inbox"]
+            sink_b = bb["sink"] + bb["sink_wctx"]
+        else:
+            tl = memory_timeline(sched, times, m_b=1.0, m_w=1.0)
+            act_b = float(tl.peak_act.max()) * byte_model.m_b_bytes
+            wctx_b = float(tl.peak_wctx.max()) * byte_model.m_w_bytes
+            inbox_b = ep.inbox_slot_total() * self._act_msg_bytes()
+            sink_res, sink_wctx = self._sink_slot_bytes()
+            sink_b = (
+                ep.n_sink_slots * sink_res + ep.n_sink_wctx_slots * sink_wctx
+            )
+        breakdown = HBMBreakdown(
+            params=params,
+            optim=optim,
+            act=float(act_b),
+            wctx=float(wctx_b),
+            inbox=float(inbox_b),
+            sink=float(sink_b),
+            xla_temp=self.xla_temp_bytes,
+        )
+        return PipelinePlan(
+            name=name,
+            schedule=sched,
+            placement=sched.placement,
+            byte_model=byte_model,
+            cost=res.cost,
+            bubble_rate=res.bubble_rate,
+            breakdown=breakdown,
+            fits=True,  # byte-feasibility decided against a budget later
+            note=note,
+        )
+
+    # -- family enumeration ---------------------------------------------- #
+    def _static_plans(self) -> List[PipelinePlan]:
+        from .schedules import (
+            interleaved_1f1b,
+            one_f_one_b,
+            v_half,
+            v_min,
+            zb_h1,
+            zb_h2,
+            zb_v,
+        )
+
+        p, m = self.p, self.m
+        if self._static is None:
+            cands = [
+                self._evaluate(
+                    "1f1b", lambda: one_f_one_b(p, m), 1,
+                    grouped_w=True, note="fused backward",
+                ),
+                self._evaluate("zb-h1", lambda: zb_h1(p, m), 1),
+                self._evaluate("zb-h2", lambda: zb_h2(p, m), 1),
+                self._evaluate(
+                    "zb-v", lambda: zb_v(p, m, times=self.times), 2
+                ),
+                self._evaluate(
+                    "v-half", lambda: v_half(p, m, times=self.times), 2
+                ),
+                self._evaluate(
+                    "v-min", lambda: v_min(p, m, times=self.times), 2
+                ),
+            ]
+            if m % p == 0:
+                cands.append(
+                    self._evaluate(
+                        "1f1b-interleaved",
+                        lambda: interleaved_1f1b(p, m, v=2),
+                        2,
+                        grouped_w=True,
+                        note="fused backward",
+                    )
+                )
+            self._static = cands
+        return self._static
+
+    def _budget_limit_units(self, budget_bytes: float, n_chunks: int) -> float:
+        """Budget-implied schedule-memory limit in full-stage M_B units."""
+        byte_model = self.bytes_1c if n_chunks == 1 else self.bytes_2c
+        if byte_model.m_b_bytes <= 0:
+            return 0.0
+        params, optim = self.fixed_bytes(n_chunks)
+        avail = budget_bytes - params - optim - self.xla_temp_bytes
+        if not math.isfinite(avail):
+            return _LIMIT_CAP_FACTOR * self.p
+        limit = round(avail / byte_model.m_b_bytes, 1)
+        return min(limit, _LIMIT_CAP_FACTOR * self.p)
+
+    def _seed_one_search(
+        self, budget_bytes: float, n_chunks: int, prefix: str, placement, note: str
+    ) -> None:
+        """Seed a budget-implied search, tightening the limit when needed.
+
+        The first limit only discounts the schedule-independent terms
+        (params/optim/temp); inbox + sink bytes depend on the schedule, so
+        when the seeded candidate overshoots the budget the limit is
+        re-derived with that candidate's actual overhead and the search
+        re-run tighter (bounded retries) -- otherwise a feasible plan just
+        inside the boundary would be missed and the budget misreported as
+        infeasible.
+        """
+        from .schedules import search
+
+        p, m = self.p, self.m
+        byte_model = self.bytes_1c if n_chunks == 1 else self.bytes_2c
+        lim = self._budget_limit_units(budget_bytes, n_chunks)
+        for _ in range(3):
+            if lim < 1.0:
+                return
+            name = f"{prefix}@{lim:.1f}Mb"
+            if name not in self._dynamic:
+                lim_now = lim
+                self._dynamic[name] = self._evaluate(
+                    name,
+                    lambda: search(
+                        p, m, self.times, m_limit=lim_now, placement=placement
+                    ).schedule,
+                    n_chunks,
+                    note=note,
+                )
+            cand = self._dynamic[name]
+            if cand.schedule is None or cand.total_bytes <= budget_bytes:
+                return
+            if byte_model.m_b_bytes <= 0 or not math.isfinite(budget_bytes):
+                return
+            overhead = cand.total_bytes - cand.breakdown.act
+            retry = round(
+                (budget_bytes - overhead) / byte_model.m_b_bytes - 0.05, 1
+            )
+            if retry >= lim:  # no progress possible
+                return
+            lim = retry
+
+    def _seed_budget_searches(self, budget_bytes: float) -> None:
+        self._seed_one_search(
+            budget_bytes, 1, "zb-auto", None,
+            note="Sec.-3.1 heuristic at the budget-implied limit",
+        )
+        self._seed_one_search(
+            budget_bytes, 2, "v-flex", "v_flex",
+            note="v_flex portfolio at the budget-implied limit",
+        )
+
+    def candidates(self, budget_bytes: Optional[float] = None) -> List[PipelinePlan]:
+        """The full family (cached) plus cumulative budget-tuned searches."""
+        if budget_bytes is not None:
+            self._seed_budget_searches(budget_bytes)
+        return list(self._static_plans()) + list(self._dynamic.values())
+
+    # -- the decision ----------------------------------------------------- #
+    def plan(self, budget_bytes: float) -> PlanReport:
+        plans = []
+        for c in self.candidates(budget_bytes):
+            if c.schedule is None:
+                plans.append(c)
+                continue
+            plans.append(
+                dataclasses.replace(c, fits=c.total_bytes <= budget_bytes)
+            )
+        feasible = [c for c in plans if c.fits and c.schedule is not None]
+        finite = [c for c in plans if c.schedule is not None]
+        min_required = min((c.total_bytes for c in finite), default=_INF)
+        if not feasible:
+            return PlanReport(
+                budget_bytes=budget_bytes,
+                feasible=False,
+                chosen=None,
+                plans=plans,
+                min_required_bytes=min_required,
+            )
+        best = min(feasible, key=lambda c: (c.cost, c.total_bytes))
+        return PlanReport(
+            budget_bytes=budget_bytes,
+            feasible=True,
+            chosen=best,
+            plans=plans,
+            min_required_bytes=min_required,
+        )
+
+
+# --------------------------------------------------------------------- #
+# the single entry point, disk-cached
+# --------------------------------------------------------------------- #
+def _plan_payload(p: PipelinePlan) -> Dict[str, Any]:
+    d = {
+        "name": p.name,
+        "cost": p.cost,
+        "bubble_rate": p.bubble_rate,
+        "fits": p.fits,
+        "note": p.note,
+        "schedule": (
+            schedule_to_payload(p.schedule) if p.schedule is not None else None
+        ),
+        "breakdown": p.breakdown.items() if p.breakdown is not None else None,
+    }
+    if p.byte_model is not None:
+        d["unit_bytes"] = [p.byte_model.m_b_bytes, p.byte_model.m_w_bytes]
+    return d
+
+
+def _plan_from_payload(d: Dict[str, Any]) -> PipelinePlan:
+    sched = (
+        schedule_from_payload(d["schedule"]) if d.get("schedule") else None
+    )
+    bd = HBMBreakdown(**d["breakdown"]) if d.get("breakdown") else None
+    bm = None
+    if d.get("unit_bytes"):
+        bm = ActivationByteModel.from_measured(*d["unit_bytes"])
+    return PipelinePlan(
+        name=d["name"],
+        schedule=sched,
+        placement=sched.placement if sched is not None else None,
+        byte_model=bm,
+        cost=d["cost"],
+        bubble_rate=d["bubble_rate"],
+        breakdown=bd,
+        fits=d["fits"],
+        note=d.get("note", ""),
+    )
+
+
+def _report_to_payload(r: PlanReport) -> Dict[str, Any]:
+    return {
+        "budget_bytes": (
+            r.budget_bytes if math.isfinite(r.budget_bytes) else None
+        ),
+        "feasible": r.feasible,
+        "min_required_bytes": r.min_required_bytes,
+        "chosen": _plan_payload(r.chosen) if r.chosen is not None else None,
+        "plans": [_plan_payload(p) for p in r.plans],
+    }
+
+
+def _report_from_payload(d: Dict[str, Any]) -> PlanReport:
+    chosen = _plan_from_payload(d["chosen"]) if d.get("chosen") else None
+    return PlanReport(
+        budget_bytes=(
+            d["budget_bytes"] if d.get("budget_bytes") is not None else _INF
+        ),
+        feasible=d["feasible"],
+        chosen=chosen,
+        plans=[_plan_from_payload(p) for p in d.get("plans", [])],
+        min_required_bytes=d["min_required_bytes"],
+        from_cache=True,
+    )
+
+
+def plan(
+    config,
+    p: int,
+    m: int,
+    times: Optional[TimeModel] = None,
+    hbm_budget_bytes: float = _INF,
+    *,
+    microbatch: int = 1,
+    seq_len: int = 2048,
+    tp_size: int = 1,
+    dp_size: int = 1,
+    measured: bool = False,
+    xla_temp_bytes: float = 0.0,
+    cache: Optional[PlanCache] = None,
+    use_cache: bool = True,
+) -> PlanReport:
+    """Pick the fastest schedule (across every family) that fits the budget.
+
+    Returns a :class:`PlanReport`; on infeasibility ``report.feasible`` is
+    False and ``report.infeasibility_report()`` itemizes the cheapest
+    plan's HBM breakdown, naming the binding term.  Results are persisted
+    in the content-keyed on-disk plan cache (key: config content, run
+    shape, times, budget, fidelity) so a repeated sweep -- even from a
+    fresh process -- replays the stored plan.
+
+    For budget *sweeps* prefer one :class:`HBMPlanner` and call its
+    ``.plan`` per point: the planner's cumulative search pool guarantees a
+    monotone cost-vs-budget frontier.
+    """
+    times = times or TimeModel.unit()
+    if cache is None:
+        cache = default_cache() if use_cache else PlanCache(None, enabled=False)
+    key = cache.key(
+        "plan",
+        cfg=config,
+        p=p,
+        m=m,
+        microbatch=microbatch,
+        seq_len=seq_len,
+        tp=tp_size,
+        dp=dp_size,
+        measured=measured,
+        xla_temp=xla_temp_bytes,
+        times=times_payload(times),
+        budget=hbm_budget_bytes,
+    )
+    hit = cache.get(key)
+    if hit is not None:
+        return _report_from_payload(hit)
+    planner = HBMPlanner(
+        config,
+        p=p,
+        m=m,
+        microbatch=microbatch,
+        seq_len=seq_len,
+        times=times,
+        tp_size=tp_size,
+        dp_size=dp_size,
+        measured=measured,
+        xla_temp_bytes=xla_temp_bytes,
+    )
+    report = planner.plan(hbm_budget_bytes)
+    cache.put(key, _report_to_payload(report))
+    return report
+
+
+# --------------------------------------------------------------------- #
+# unit-space family search (straggler replanning)
+# --------------------------------------------------------------------- #
+def fastest_under_profile(
+    p: int,
+    m: int,
+    times: TimeModel,
+    m_limit: float,
+    m_b: float = 1.0,
+    m_w: float = 0.5,
+) -> Tuple[Schedule, float]:
+    """Cheapest schedule across all families under a unit memory limit.
+
+    The byte-free counterpart of :meth:`HBMPlanner.plan` used by the
+    runtime's straggler replanning: the limit is in (M_B, M_W) units and
+    candidates are filtered by the op-count memory profile, the same
+    convention as ``auto.search``.  Returns (schedule, simulated cost).
+
+    Two searches cover every family: the linear-placement grid (which
+    already folds in the handcrafted ZB-H1/H2 portfolio) and the V-shape
+    grid with the ``v_flex`` portfolio (which folds in handcrafted ZB-V
+    and the stable V-Min/V-Half patterns) -- re-building V-Min/V-Half
+    separately would only repeat portfolio members under the same limit.
+    """
+    from .schedules import search
+
+    best: Optional[Tuple[float, Schedule]] = None
+
+    def consider(sched: Schedule) -> None:
+        nonlocal best
+        C = sched.n_chunks
+        peak = sched.memory_profile(m_b / C, m_w / C).max_peak
+        if peak > m_limit + 1e-9:
+            return
+        try:
+            cost = simulate(sched, times).cost
+        except (ValueError, RuntimeError):
+            return
+        if best is None or cost < best[0]:
+            best = (cost, sched)
+
+    for placement in (None, "v_flex"):
+        try:
+            consider(
+                search(
+                    p, m, times, m_limit=m_limit, m_b=m_b, m_w=m_w,
+                    placement=placement,
+                ).schedule
+            )
+        except RuntimeError:
+            pass
+    if best is None:
+        raise RuntimeError(
+            f"no schedule fits the unit memory limit {m_limit} (p={p}, m={m})"
+        )
+    return best[1], best[0]

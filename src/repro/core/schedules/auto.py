@@ -44,8 +44,21 @@ def search(
     name: str = "zb-auto",
     refine_steps: int = 0,
 ) -> AutoResult:
-    """Grid-search the heuristic's binary hyperparameters (paper Sec. 3.1)."""
+    """Grid-search the heuristic's binary hyperparameters (paper Sec. 3.1).
+
+    ``placement`` may also be the string ``"v_flex"``: the search then runs
+    on the two-chunk V placement and additionally enters the
+    controllable-memory ``v_flex`` portfolio (arXiv 2405.15362) as a
+    candidate, decided against the greedy grid by simulated cost (the
+    portfolio is consulted via the on-disk plan cache, so a second process
+    replays it).  Every returned schedule still honors ``m_limit`` on the
+    op-count memory profile.
+    """
     from ..simulator import simulate
+
+    v_flex_mode = placement == "v_flex"
+    if v_flex_mode:
+        placement = Placement.vshape(p)
 
     best: Optional[AutoResult] = None
     grid = itertools.product([True, False], repeat=5)
@@ -89,6 +102,37 @@ def search(
         if best is None or res.cost < best.cost:
             sched.name = name
             best = AutoResult(sched, res.cost, res.bubble_rate, GreedyConfig(m_limit))
+    if v_flex_mode:
+        from .vflex import v_flex
+
+        # the portfolio caps the activation component; keep only candidates
+        # whose *combined* (act + wctx) profile honors m_limit, so the
+        # m_limit contract matches the grid's.  The full-limit cap is tried
+        # first and smaller caps only when it overshoots the combined
+        # profile (each cap is a whole portfolio build -- disk-cached, but
+        # the first build must stay interactive).  Simulated cost decides
+        # the tie-break against the greedy grid (ties go to v_flex: at
+        # equal cost it additionally bounds the activation peak).
+        limit_units = m_limit / m_b if m_b > 0 else m_limit
+        for frac in (1.0, 0.75, 0.5):
+            al = limit_units * frac
+            if al < 1.0:
+                continue
+            try:
+                sched = v_flex(p, m, al, times=times, name=name)
+            except (ValueError, RuntimeError):
+                continue
+            peak = sched.memory_profile(
+                m_b / sched.n_chunks, m_w / sched.n_chunks
+            ).max_peak
+            if peak > m_limit + 1e-9:
+                continue  # wctx overshoot: retry with a tighter act cap
+            res = simulate(sched, times)
+            if best is None or res.cost <= best.cost + 1e-9:
+                best = AutoResult(
+                    sched, res.cost, res.bubble_rate, GreedyConfig(m_limit)
+                )
+            break  # first cap whose combined profile fits is enough
     if best is None:
         raise RuntimeError(f"no feasible schedule found (p={p}, m={m}, limit={m_limit})")
     if refine_steps > 0:

@@ -461,6 +461,17 @@ class ExecutionPlan:
     def bubble_fraction(self) -> float:
         return 1.0 - self.total_ops / (self.p * self.n_ticks)
 
+    def inbox_slot_total(self) -> int:
+        """Total inbox slots the executor allocates (act + grad families).
+
+        The inboxes are flat (C, max-slots) buffers -- a uniform stride for
+        the flattened slot indexing in the tick body -- so the allocation
+        is C * max(per-chunk slots) per family, not the per-chunk sum.
+        Single source of truth for ``PipelineExecutor.buffer_bytes`` and
+        the planner's model-fidelity inbox estimate.
+        """
+        return self.n_chunks * (max(self.n_act_slots) + max(self.n_grad_slots))
+
     def channel_live_ticks(self) -> np.ndarray:
         """(4,) number of ticks each channel carries at least one message."""
         live = np.zeros(N_CHANNELS, dtype=np.int64)

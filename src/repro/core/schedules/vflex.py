@@ -330,13 +330,32 @@ def _wctx_backlog_peak(schedule: Schedule) -> int:
     return worst
 
 
-def _compact_w(schedule: Schedule, times, max_moves: int = 200) -> Schedule:
+def _compact_w(
+    schedule: Schedule,
+    times,
+    max_moves: int = 200,
+    sim_budget: Optional[int] = None,
+) -> Schedule:
     """Move W passes earlier while the simulated cost does not increase.
 
     Purely reduces the B->W context backlog (the W-context bytes a banked
     drain accumulates); activation peaks are untouched by W moves.
+
+    Every attempted swap re-simulates the whole schedule, so the search is
+    bounded: ``sim_budget`` caps the number of simulations (scaled down as
+    schedules grow), and very large schedules skip compaction entirely --
+    it is a cost-neutral backlog nicety, not worth minutes of build time
+    at runtime-replanning scale (the portfolio is disk-cached, but the
+    first build must still be interactive).
     """
     from ..simulator import simulate
+
+    total_ops = sum(len(ops) for ops in schedule.stage_ops)
+    if total_ops > 3000:
+        return schedule
+    if sim_budget is None:
+        sim_budget = max(300, 120000 // max(1, total_ops))
+    sims = 0
 
     best = schedule
     best_cost = simulate(best, times).cost
@@ -349,6 +368,8 @@ def _compact_w(schedule: Schedule, times, max_moves: int = 200) -> Schedule:
             for i in range(1, len(ops)):
                 if ops[i].kind != OpKind.W or ops[i - 1].kind == OpKind.W:
                     continue
+                if sims >= sim_budget:
+                    return best
                 new_ops = [list(o) for o in best.stage_ops]
                 new_ops[s][i - 1], new_ops[s][i] = new_ops[s][i], new_ops[s][i - 1]
                 try:
@@ -356,6 +377,7 @@ def _compact_w(schedule: Schedule, times, max_moves: int = 200) -> Schedule:
                         best.p, best.m, new_ops,
                         placement=best.placement, name=best.name,
                     )
+                    sims += 1
                     cost = simulate(cand, times).cost
                 except (ValueError, RuntimeError):
                     continue
@@ -394,8 +416,10 @@ def v_flex(
     Portfolio construction + simulation is memoized per
     ``(p, m, act_limit, times, compact)`` in an in-process LRU (planner
     budget sweeps and test grids rebuild the same few schedules dozens of
-    times); each call returns a fresh :class:`Schedule` built from the
-    cached op lists, so callers may mutate ``name`` freely.
+    times) backed by the content-keyed on-disk plan cache (cross-process
+    sweeps, see repro.core.plan_cache); each call returns a fresh
+    :class:`Schedule` built from the cached op lists, so callers may
+    mutate ``name`` freely.
     """
     from ..simulator import TimeModel
 
@@ -409,7 +433,43 @@ def v_flex(
 def _v_flex_build(
     p: int, m: int, act_limit: float, times, compact: bool
 ) -> Tuple[Tuple[Tuple[Op, ...], ...], Placement]:
-    """Memoized portfolio search; returns immutable (stage_ops, placement)."""
+    """Memoized portfolio search; returns immutable (stage_ops, placement).
+
+    Two cache layers: this in-process LRU, and underneath it the
+    content-keyed on-disk plan cache (:mod:`repro.core.plan_cache`, keyed
+    ``(p, m, act_limit, times, compact)``) so cross-process budget sweeps
+    replay the portfolio instead of rebuilding it.
+    """
+    from .. import plan_cache
+
+    cache = plan_cache.default_cache()
+    cache_key = cache.key(
+        "v_flex",
+        p=p,
+        m=m,
+        act_limit=act_limit,
+        times=plan_cache.times_payload(times),
+        compact=compact,
+    )
+    payload = cache.get(cache_key)
+    if payload is not None:
+        sched = plan_cache.schedule_from_payload(payload)
+        return (
+            tuple(tuple(ops) for ops in sched.stage_ops),
+            sched.placement,
+        )
+    best = _v_flex_portfolio(p, m, act_limit, times, compact)
+    cache.put(cache_key, plan_cache.schedule_to_payload(best))
+    return (
+        tuple(tuple(ops) for ops in best.stage_ops),
+        best.placement,
+    )
+
+
+def _v_flex_portfolio(
+    p: int, m: int, act_limit: float, times, compact: bool
+) -> Schedule:
+    """Build + simulate the deterministic portfolio; returns the winner."""
     from ..simulator import simulate
     cap = int(2 * act_limit)  # chunk passes (2 per full-stage M_B)
     if cap < 2:
@@ -454,10 +514,7 @@ def _v_flex_build(
         )
     if compact:
         best = _compact_w(best, times)
-    return (
-        tuple(tuple(ops) for ops in best.stage_ops),
-        best.placement,
-    )
+    return best
 
 
 def v_min_limit(p: int, m_b: float = 1.0) -> float:

@@ -188,6 +188,21 @@ def dryrun_cell(arch_id, shape_id, multi_pod=False, schedule="zb-h2", verbose=Tr
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):  # one dict per device program
         cost = cost[0] if cost else {}
+    # Calibrate the analytic byte model against the compiled artifact: the
+    # part of the XLA temp footprint the schedule-buffer model cannot see
+    # becomes a per-config fudge term the HBM planner charges against the
+    # budget (ActivationByteModel.calibrate_from_dryrun, DESIGN.md Sec. 6).
+    xla_temp = modeled_schedule = None
+    if cell.kind == "train":
+        from repro.core.memory import ActivationByteModel
+
+        byte_model = ActivationByteModel.from_config(
+            cfg, spec.microbatch, spec.seq_len, p,
+            n_chunks=spec.n_chunks, tp_size=tp,
+        )
+        modeled_schedule = byte_model.schedule_bytes(sched)[2]
+        calibrated = byte_model.calibrate_from_dryrun(mem, sched)
+        xla_temp = calibrated.xla_temp_bytes
     result = {
         "arch": arch_id,
         "shape": shape_id,
@@ -207,6 +222,10 @@ def dryrun_cell(arch_id, shape_id, multi_pod=False, schedule="zb-h2", verbose=Tr
         "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
         "flops": cost.get("flops") if cost else None,
         "bytes_accessed": cost.get("bytes accessed") if cost else None,
+        # per-config planner calibration (train cells): feed xla_temp_bytes
+        # to repro.core.planner.plan(..., xla_temp_bytes=...)
+        "modeled_schedule_bytes": modeled_schedule,
+        "xla_temp_bytes": xla_temp,
     }
     if verbose:
         print(json.dumps(result))

@@ -80,6 +80,7 @@ def build_train_step(
         prune_channels=tcfg.prune_channels,
         tp_axis=binding.tp,
         shard_channels=tcfg.shard_channels,
+        tp_size=binding.sizes(mesh)[1],
     )
     grad_fn = execu.build_grad_fn()
     p, tp, dp = binding.sizes(mesh)

@@ -72,11 +72,14 @@ def build_everything(
     if memory_budget_bytes is not None:
         from ..runtime.driver import replan_under_budget
 
-        sched, decision = replan_under_budget(
+        sched, report = replan_under_budget(
             cfg, pipe_size, m, microbatch, seq_len, memory_budget_bytes,
             tp_size=tp_size,
         )
-        print(f"memory planner: {decision.summary()}")
+        print(f"HBM planner: {report.summary()}")
+        if report.chosen is not None and report.chosen.breakdown is not None:
+            print("per-device HBM breakdown:")
+            print(report.chosen.breakdown.report())
     else:
         sched = SCHEDULES[schedule](pipe_size, m)
     plan = compile_plan(sched)
@@ -140,8 +143,10 @@ def main():
         "--memory-budget-mb",
         type=float,
         default=None,
-        help="per-device schedule memory budget (activations + W-contexts); "
-        "picks the fastest schedule that fits (overrides --schedule)",
+        help="per-device HBM budget: params + zero1 optimizer state + "
+        "channel/inbox/sink buffers + schedule memory; picks the fastest "
+        "schedule across all families that fits (overrides --schedule); "
+        "plans are reused across processes via $REPRO_PLAN_CACHE_DIR",
     )
     args = ap.parse_args()
 

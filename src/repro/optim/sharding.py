@@ -16,11 +16,41 @@ import jax.numpy as jnp
 
 PyTree = Any
 
-__all__ = ["shard_leaf", "unshard_leaf", "scatter_grads", "gather_params"]
+__all__ = [
+    "shard_leaf",
+    "unshard_leaf",
+    "scatter_grads",
+    "gather_params",
+    "zero1_state_bytes",
+]
 
 
 def _pad_len(n: int, dp: int) -> int:
     return (n + dp - 1) // dp * dp
+
+
+def zero1_state_bytes(
+    params: PyTree,
+    dp_size: int,
+    n_moments: int = 2,
+    moment_dtype_bytes: int = 4,
+) -> float:
+    """Per-rank optimizer-state bytes under ZeRO-1 sharding.
+
+    AdamW keeps ``n_moments`` fp32 mirrors (m, v) of every parameter;
+    each dp rank holds the padded 1/dp flat shard of each leaf (the same
+    ``_pad_len`` rule ``shard_leaf`` applies), so this is the byte-exact
+    planning counterpart of the runtime sharding above.  ``params`` may be
+    arrays or ``ShapeDtypeStruct`` pytrees -- only shapes are read.
+    """
+    import numpy as np
+
+    dp = max(1, int(dp_size))
+    elems = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        elems += _pad_len(n, dp) // dp
+    return float(elems * n_moments * moment_dtype_bytes)
 
 
 def shard_leaf(x: jax.Array, axis_name: str) -> jax.Array:

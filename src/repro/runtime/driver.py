@@ -52,18 +52,28 @@ def replan_for_stragglers(
     stage_scale,
     m_limit: float,
 ):
-    """Re-search the ZB schedule for an observed per-stage slowdown profile.
+    """Re-plan the schedule for an observed per-stage slowdown profile.
 
-    Returns (schedule, predicted_cost, baseline_cost): the baseline is the
-    balanced-profile schedule evaluated under the *observed* profile.
+    Delegates to the unified planning layer's family search
+    (:func:`repro.core.planner.fastest_under_profile`): every schedule
+    family -- the Sec.-3.1 greedy grid, the handcrafted portfolio, the
+    v_flex portfolio, ZB-V/V-Half/V-Min -- is re-simulated under the
+    observed profile and the cheapest one under the unit memory limit
+    wins.  Returns (schedule, predicted_cost, baseline_cost): the baseline
+    is the balanced-profile choice evaluated under the *observed* profile,
+    and the balanced choice itself stays in the candidate pool, so the
+    replanned cost never exceeds the baseline.
     """
+    from ..core.planner import fastest_under_profile
     from ..core.simulator import simulate
 
     observed = dataclasses.replace(base_times, stage_scale=tuple(stage_scale))
-    balanced = search(p, m, base_times, m_limit=m_limit)
-    base_cost = simulate(balanced.schedule, observed).cost
-    replanned = search(p, m, observed, m_limit=m_limit)
-    return replanned.schedule, replanned.cost, base_cost
+    balanced, _ = fastest_under_profile(p, m, base_times, m_limit)
+    base_cost = simulate(balanced, observed).cost
+    replanned, cost = fastest_under_profile(p, m, observed, m_limit)
+    if base_cost < cost:  # the balanced pick is itself a valid candidate
+        replanned, cost = balanced, base_cost
+    return replanned, cost, base_cost
 
 
 def replan_under_budget(
@@ -76,60 +86,69 @@ def replan_under_budget(
     base_times: Optional[TimeModel] = None,
     stage_scale=None,
     tp_size: int = 1,
+    dp_size: int = 1,
     program_factory=None,
+    xla_temp_bytes: float = 0.0,
 ):
-    """Re-plan the schedule when the per-device memory budget changes.
+    """Re-plan the schedule when the per-device HBM budget changes.
 
-    Runtime counterpart of launch-time planning (DESIGN.md Sec. 5): after an
+    Runtime counterpart of launch-time planning (DESIGN.md Sec. 6): after an
     elastic reshard, a sequence-length bump, or a co-tenant claiming device
-    memory, the driver re-runs the byte-level planner -- optionally under the
-    monitor's observed straggler profile -- and returns
-    (schedule, PlannerDecision).  Raises RuntimeError with the planner's
-    report when nothing fits, so the caller can shrink the microbatch or
-    spill instead of OOMing mid-run.
+    memory, the driver re-runs the unified planner
+    (:func:`repro.core.planner.plan`) -- optionally under the monitor's
+    observed straggler profile -- and returns (schedule,
+    :class:`~repro.core.planner.PlanReport`).  The budget is a *total*
+    per-device HBM budget: parameters, ZeRO-1-sharded optimizer state,
+    channel/inbox/sink buffers and the XLA-temp fudge are charged on top of
+    the schedule's activation/W-context bytes.  Raises RuntimeError with
+    the planner's itemized report (naming the binding term) when nothing
+    fits, so the caller can shrink the microbatch or spill instead of
+    OOMing mid-run.
 
     When ``program_factory(n_chunks) -> (program, stage_params, shared,
     side)`` is supplied (pytrees may be ``ShapeDtypeStruct``; nothing is
-    computed), the chosen plan is additionally validated against *measured*
-    executor buffer bytes (:func:`repro.core.memory.measured_timeline`) --
-    the budget is then enforced on real buffers, not just the analytic
-    model.
+    computed), the planner switches to *measured* fidelity: every
+    candidate's act/wctx/inbox/sink bytes come from the tick executor's
+    real buffer allocation (``PipelineExecutor.buffer_bytes``), so the
+    budget is enforced on real buffers, not just the analytic model.
     """
-    from ..core.memory import MemoryBudgetPlanner, measured_timeline
+    from ..core.planner import HBMPlanner, plan as plan_hbm
 
     times = base_times or TimeModel.unit()
     if stage_scale is not None:
         times = dataclasses.replace(times, stage_scale=tuple(stage_scale))
-    planner = MemoryBudgetPlanner(
-        cfg, p=p, m=m, microbatch=microbatch, seq_len=seq_len,
-        times=times, tp_size=tp_size,
-    )
-    decision = planner.plan(budget_bytes)
-    if not decision.feasible:
-        raise RuntimeError(f"no schedule fits the budget: {decision.summary()}")
-    if program_factory is not None:
-        from ..core.executor import PipelineExecutor
-        from ..core.schedules import compile_plan
-
-        chosen = decision.chosen.schedule
-        program, stage_params, shared, side = program_factory(chosen.n_chunks)
-        exe = PipelineExecutor(program, compile_plan(chosen))
-        mt = measured_timeline(exe, stage_params, shared, side)
-        if mt.alloc_total > budget_bytes:
-            raise RuntimeError(
-                "budget infeasible on measured executor buffers: "
-                f"{decision.chosen.name} allocates {mt.alloc_total/2**20:.0f} "
-                f"MiB > budget {budget_bytes/2**20:.0f} MiB "
-                f"(act {mt.alloc_act/2**20:.0f}, wctx {mt.alloc_wctx/2**20:.0f},"
-                f" inbox {mt.alloc_inbox/2**20:.0f} MiB)"
-            )
-        log.info(
-            "measured executor bytes for %s: %.0f MiB (act %.0f, wctx %.0f)",
-            decision.chosen.name, mt.alloc_total / 2**20,
-            mt.alloc_act / 2**20, mt.alloc_wctx / 2**20,
+    measured = program_factory is not None
+    if measured:
+        # a factory is process-local state; plan without the disk cache
+        planner = HBMPlanner(
+            cfg, p=p, m=m, microbatch=microbatch, seq_len=seq_len,
+            times=times, tp_size=tp_size, dp_size=dp_size,
+            measured=True, program_factory=program_factory,
+            xla_temp_bytes=xla_temp_bytes,
         )
-    log.info("replanned under budget: %s", decision.summary())
-    return decision.chosen.schedule, decision
+        report = planner.plan(budget_bytes)
+    else:
+        report = plan_hbm(
+            cfg, p, m, times, budget_bytes,
+            microbatch=microbatch, seq_len=seq_len,
+            tp_size=tp_size, dp_size=dp_size,
+            xla_temp_bytes=xla_temp_bytes,
+        )
+    if not report.feasible:
+        fidelity = "measured executor buffers" if measured else "the byte model"
+        raise RuntimeError(
+            f"no schedule fits the per-device HBM budget (on {fidelity}): "
+            f"{report.infeasibility_report()}"
+        )
+    if measured:
+        bd = report.chosen.breakdown
+        log.info(
+            "measured executor bytes for %s: %.0f MiB (act %.0f, wctx %.0f, "
+            "inbox %.0f)", report.chosen.name, bd.schedule_bytes / 2**20,
+            bd.act / 2**20, bd.wctx / 2**20, bd.inbox / 2**20,
+        )
+    log.info("replanned under budget: %s", report.summary())
+    return report.chosen.schedule, report
 
 
 def rebalance_layers(

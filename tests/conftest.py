@@ -111,3 +111,27 @@ except ImportError:
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# ----------------------------------------------------------------------- #
+# plan-cache isolation: the scheduling layer persists plans on disk
+# (repro.core.plan_cache); tests must neither read a developer's warm cache
+# nor leave entries behind, so the whole session runs against a tmp dir
+# unless a test explicitly overrides REPRO_PLAN_CACHE_DIR itself.
+# ----------------------------------------------------------------------- #
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_plan_cache(tmp_path_factory):
+    import os
+
+    prev = os.environ.get("REPRO_PLAN_CACHE_DIR")
+    os.environ["REPRO_PLAN_CACHE_DIR"] = str(
+        tmp_path_factory.mktemp("plan_cache")
+    )
+    yield
+    if prev is None:
+        os.environ.pop("REPRO_PLAN_CACHE_DIR", None)
+    else:
+        os.environ["REPRO_PLAN_CACHE_DIR"] = prev

@@ -212,26 +212,26 @@ def test_driver_replan_validates_measured_bytes():
     assert decision.feasible
     sched_ok.validate()
 
-    # a budget the analytic model accepts but real buffers (inbox + sink +
-    # wctx overheads) exceed must be rejected on measured bytes
-    planner = MemoryBudgetPlanner(cfg, p=p, m=m, microbatch=2, seq_len=8)
-    squeezed = min(
-        c.total_bytes for c in planner.candidates() if c.schedule is not None
-    ) + 1.0
-    d2 = planner.plan(squeezed)
-    assert d2.feasible  # the analytic model admits this budget...
-    chosen = d2.chosen.schedule
-    prog2, sp2, shared2, side2 = factory(chosen.n_chunks)
-    exe2 = PipelineExecutor(prog2, compile_plan(chosen), pipe_axis="pipe")
-    mt2 = measured_timeline(exe2, sp2, shared2, side2)
-    # ...but real buffers (inbox + sink + measured act/wctx content) do not:
-    # on this tiny config the analytic per-kind table underestimates ~4x,
-    # so the rejection branch is guaranteed to be exercised
-    assert mt2.alloc_total > squeezed
+    # a budget below the provable measured floor -- fixed params/optimizer
+    # state plus half a measured M_B unit (every schedule keeps at least
+    # one full-stage residual in flight at peak) -- must be rejected on
+    # measured bytes, whatever limit the planner's budget-implied searches
+    # refine down to.  (The planner may legitimately *satisfy* budgets the
+    # static family exceeds, by searching frugal v_flex/auto plans; the
+    # hard floor is what cannot be planned around.)
+    planner = MemoryBudgetPlanner(
+        cfg, p=p, m=m, microbatch=2, seq_len=8,
+        measured=True, program_factory=factory,
+    )
+    m_b_meas, _ = mt_ref.unit_bytes()
+    fixed = min(
+        sum(planner.hbm.fixed_bytes(1)), sum(planner.hbm.fixed_bytes(2))
+    )
+    floor = fixed + 0.5 * m_b_meas
     with pytest.raises(RuntimeError, match="measured"):
         replan_under_budget(
             cfg, p=p, m=m, microbatch=2, seq_len=8,
-            budget_bytes=squeezed,
+            budget_bytes=floor,
             program_factory=factory,
         )
 
