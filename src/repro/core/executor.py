@@ -13,7 +13,8 @@ auto-searched -- as one SPMD program:
   * per-stage state lives in slot-addressed buffers whose sizes come from the
     plan's interval analysis: activation/gradient inboxes, residuals (F->B,
     freed when B completes -- the paper's accounting), weight-grad contexts
-    (B->W; the wgrad closure inputs emitted by the true split-VJP), and the
+    (B->W; the byte-minimal M_W context of the compact split, including any
+    stacked per-step scan contexts -- DESIGN.md Sec. 7), and the
     head+loss residuals/contexts at the loss position.  When the chunks'
     buffer structures agree (the uniform-group SPMD case), residual and
     W-context pools are shared across chunks, so the per-device footprint is
@@ -315,6 +316,16 @@ class PipelineExecutor:
         sink_wctx_total = plan.n_sink_wctx_slots * self._tree_bytes(
             st["sink_wctx"]
         )
+        # per-block W-context bytes (one entry per block of each chunk, when
+        # the chunk module exposes a per-block context tuple -- ChunkFBW
+        # does).  Stacked scan-split contexts are ordinary leaves here; this
+        # is the number the recurrent-split acceptance measures.
+        wctx_block_bytes = tuple(
+            tuple(self._tree_bytes(blk) for blk in sh)
+            if isinstance(sh, (tuple, list))
+            else (self._tree_bytes(sh),)
+            for sh in wctx_sh
+        )
         return dict(
             res=float(res_total),
             wctx=float(wctx_total),
@@ -327,6 +338,7 @@ class PipelineExecutor:
             ),
             res_slot_bytes=tuple(float(b) for b in res_slot_bytes),
             wctx_slot_bytes=tuple(float(b) for b in wctx_slot_bytes),
+            wctx_block_bytes=wctx_block_bytes,
         )
 
     # ------------------------------------------------------------------ #
@@ -558,7 +570,8 @@ class PipelineExecutor:
                         dy = dy_inbox
 
                     # True input-gradient VJP: emits the compact M_W context
-                    # (wgrad closure inputs); the residual slot is dead after
+                    # (the byte-minimal cut; for split recurrences a stacked
+                    # per-step context); the residual slot is dead after
                     # this tick and the interval analysis reuses it.
                     dx, wctx = prog.chunks[c].bwd_x(
                         stage_params[c], res, dy, side_mb

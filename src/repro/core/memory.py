@@ -63,6 +63,7 @@ __all__ = [
     "MeasuredTimeline",
     "measured_timeline",
     "measured_unit_bytes",
+    "default_xla_temp_bytes",
 ]
 
 
@@ -182,6 +183,79 @@ def memory_timeline(
 # --------------------------------------------------------------------- #
 _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
 
+# W-context / stored-activation ratios per kind bucket, calibrated against
+# the measured tiny-config grid (tests/test_split_blocks.py::
+# test_compact_context_shrinks_recurrent_blocks).  "compact" is the
+# byte-minimal cut of core/passes.py (the default split); "frontier" the
+# legacy whole-scan-in-B cut -- kept so the shrink plan() sees is itself a
+# modeled quantity.
+_WCTX_RATIO = {
+    True: {"attn": 0.35, "mlp": 0.50, "rec": 0.30},
+    False: {"attn": 0.65, "mlp": 0.75, "rec": 0.55},
+}
+
+_XLA_TEMP_TABLE = None
+
+
+def _xla_temp_table():
+    global _XLA_TEMP_TABLE
+    if _XLA_TEMP_TABLE is None:
+        import json
+        import pathlib
+
+        path = (
+            pathlib.Path(__file__).resolve().parent.parent
+            / "configs"
+            / "xla_temp_calibration.json"
+        )
+        try:
+            _XLA_TEMP_TABLE = json.loads(path.read_text())
+        except (OSError, ValueError):
+            _XLA_TEMP_TABLE = {}
+    return _XLA_TEMP_TABLE
+
+
+def default_xla_temp_bytes(
+    arch_name: str,
+    tokens: Optional[int] = None,
+    m_b_bytes: Optional[float] = None,
+) -> float:
+    """Checked-in per-config XLA-temp calibration (ROADMAP open item 1).
+
+    ``configs/xla_temp_calibration.json`` holds the ``launch/dryrun.py``
+    train-grid output (``--calibration-out``): per arch, the compiled
+    cell's temp footprint in excess of the modeled schedule bytes, plus
+    the calibration shape (per-device ``tokens``, ``tp``, ``p``) and the
+    cell's modeled ``m_b_bytes``.  The byte model loads it by default so
+    ``plan()`` charges compiler scratch without the caller running a
+    dryrun first.
+
+    Scaling: temp is dominated by per-token activation-shaped buffers, so
+    the value scales with the ratio of the *planned* M_B unit to the
+    calibration cell's (``m_b_bytes``; covers tokens and widths, so
+    ``reduced()`` tiny variants, which share the arch name, are priced
+    proportionally) and with the token ratio -- but never *up*: the grid
+    compiles on the CPU backend, which holds full program liveness, so
+    the calibrated value is already a ceiling at the production-grid
+    shape and extrapolating it upward (e.g. to tp=1) would swamp every
+    budget with CPU-only inflation.  Unknown archs price 0 (the
+    pre-calibration behavior).
+    """
+    rec = _xla_temp_table().get(arch_name)
+    if rec is None:
+        return 0.0
+    if isinstance(rec, (int, float)):
+        return float(rec)
+    raw = float(rec.get("xla_temp_bytes") or 0.0)
+    scale = 1.0
+    cal_m_b = rec.get("m_b_bytes")
+    if m_b_bytes and cal_m_b:
+        scale = min(scale, float(m_b_bytes) / float(cal_m_b))
+    cal_tokens = rec.get("tokens")
+    if tokens and cal_tokens:
+        scale = min(scale, float(tokens) / float(cal_tokens))
+    return raw * scale
+
 
 @dataclasses.dataclass(frozen=True)
 class ActivationByteModel:
@@ -198,8 +272,15 @@ class ActivationByteModel:
         with d_ff' the *activated* expert width for MoE,
       * recurrent (slstm/mlstm/rglru/encdec): state + gates ~ 6*d_model;
 
-    the W context keeps only the weight-grad inputs (~d_model per projection
-    plus the MLP hidden), empirically ~40% of M_B for transformer blocks.
+    the W context is priced as a per-kind fraction of the stored
+    activations (``_WCTX_RATIO``), calibrated against the measured
+    executor buffers on the tiny grid.  ``from_config(compact=True)`` (the
+    default) prices the byte-minimal context of the compact split --
+    recurrent blocks ~0.30 of M_B vs ~0.55 under the legacy
+    whole-scan-in-B frontier cut (``compact=False``), which is how
+    ``plan()`` sees the smaller M_W of the recurrent B/W split.
+    ``xla_temp_bytes`` defaults to the checked-in per-config calibration
+    table (:func:`default_xla_temp_bytes`).
     """
 
     m_b_bytes: float
@@ -222,6 +303,7 @@ class ActivationByteModel:
         p: int,
         n_chunks: int = 1,
         tp_size: int = 1,
+        compact: bool = True,
     ) -> "ActivationByteModel":
         dtype_bytes = _DTYPE_BYTES.get(cfg.dtype, 4)
         ex = cfg.extras_dict()
@@ -231,19 +313,20 @@ class ActivationByteModel:
         if "n_active_experts" in ex and "n_experts" in ex:
             d_ff_act = cfg.d_ff * ex["n_active_experts"]
 
+        ratio = _WCTX_RATIO[bool(compact)]
         act_per_kind = {}
         wctx_per_kind = {}
         for kinds in cfg.block_pattern:
             for kind in kinds:
                 if kind.startswith("attn") or kind == "mla":
                     act_per_kind[kind] = 4 * cfg.d_model + 2 * kv
-                    wctx_per_kind[kind] = 2 * cfg.d_model
+                    wctx_per_kind[kind] = ratio["attn"] * act_per_kind[kind]
                 elif kind in ("mlp", "moe"):
                     act_per_kind[kind] = cfg.d_model + 2 * d_ff_act
-                    wctx_per_kind[kind] = cfg.d_model + d_ff_act
+                    wctx_per_kind[kind] = ratio["mlp"] * act_per_kind[kind]
                 else:  # recurrent / state-space / frontier kinds
                     act_per_kind[kind] = 6 * cfg.d_model
-                    wctx_per_kind[kind] = 2 * cfg.d_model
+                    wctx_per_kind[kind] = ratio["rec"] * act_per_kind[kind]
 
         period = len(cfg.block_pattern)
         per_block_act = sum(
@@ -265,6 +348,11 @@ class ActivationByteModel:
             layers_per_stage=g,
             tokens=tokens,
             dtype_bytes=dtype_bytes,
+            xla_temp_bytes=default_xla_temp_bytes(
+                getattr(cfg, "name", ""),
+                tokens=tokens,
+                m_b_bytes=per_layer_act * g,
+            ),
         )
 
     def timeline_bytes(self, tl: "MemoryTimeline") -> Tuple[float, float, float]:
@@ -525,7 +613,7 @@ class MemoryBudgetPlanner:
         tp_size: int = 1,
         dp_size: int = 1,
         measured: bool = False,
-        xla_temp_bytes: float = 0.0,
+        xla_temp_bytes: Optional[float] = None,
         program_factory=None,
     ):
         from .planner import HBMPlanner

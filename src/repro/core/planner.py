@@ -209,13 +209,18 @@ def fixed_state_bytes(
 
     Parameters are shape-evaluated through the real ``init_params`` (so
     padded groups, masks, and per-family extras are priced exactly), then
-    pipe-sharded (one stage per device) and tp-divided (Megatron weight
-    sharding; exact at tp=1, proportional otherwise).  Optimizer moments
-    are ZeRO-1 sharded over the dp axis with ``optim/sharding.py``'s
-    padding rule.
+    pipe-sharded (one stage per device) and tp-sharded **per leaf** with
+    the same name-based rules the runtime applies
+    (``launch/sharding_rules.py``): column/row/expert/vocab-parallel
+    leaves divide by tp, while replicated leaves (norm gains, routers,
+    masks, ``lam``, ``*_rep`` projections when head counts do not divide
+    tp) keep full bytes on every rank -- no uniform division.  Optimizer
+    moments mirror each leaf's *local* shard and are then ZeRO-1 sharded
+    over the dp axis with ``optim/sharding.py``'s padding rule.
     """
     import jax
 
+    from ..launch.sharding_rules import tp_local_shapes
     from ..models.lm import RunSpec, init_params
     from ..optim.sharding import zero1_state_bytes
 
@@ -229,12 +234,14 @@ def fixed_state_bytes(
         Placement.vshape(p) if n_chunks == 2 else Placement.linear(p, n_chunks)
     )
     stacked, shared = jax.eval_shape(lambda: init_params(cfg, spec, placement))
-    per_stage = _strip_stage_axis(stacked)
-    param_bytes = (_tree_bytes(per_stage) + _tree_bytes(shared)) / max(1, tp_size)
-    optim_bytes = (
-        zero1_state_bytes(per_stage, dp_size)
-        + zero1_state_bytes(shared, dp_size)
-    ) / max(1, tp_size)
+    per_stage = tuple(
+        tp_local_shapes(chunk, tp_size) for chunk in _strip_stage_axis(stacked)
+    )
+    shared_local = tp_local_shapes(shared, tp_size)
+    param_bytes = _tree_bytes(per_stage) + _tree_bytes(shared_local)
+    optim_bytes = zero1_state_bytes(per_stage, dp_size) + zero1_state_bytes(
+        shared_local, dp_size
+    )
     return param_bytes, optim_bytes
 
 
@@ -261,7 +268,7 @@ class HBMPlanner:
         tp_size: int = 1,
         dp_size: int = 1,
         measured: bool = False,
-        xla_temp_bytes: float = 0.0,
+        xla_temp_bytes: Optional[float] = None,
         program_factory: Optional[Callable] = None,
     ):
         self.cfg = cfg
@@ -273,13 +280,19 @@ class HBMPlanner:
         self.tp_size = tp_size
         self.dp_size = dp_size
         self.measured = measured
-        self.xla_temp_bytes = float(xla_temp_bytes)
         self.program_factory = program_factory
         self.bytes_1c = ActivationByteModel.from_config(
             cfg, microbatch, seq_len, p, n_chunks=1, tp_size=tp_size
         )
         self.bytes_2c = ActivationByteModel.from_config(
             cfg, microbatch, seq_len, p, n_chunks=2, tp_size=tp_size
+        )
+        # None -> the checked-in per-config dryrun calibration the byte
+        # model loaded (0 for uncalibrated archs)
+        self.xla_temp_bytes = (
+            float(xla_temp_bytes)
+            if xla_temp_bytes is not None
+            else float(self.bytes_1c.xla_temp_bytes)
         )
         self._static: Optional[List[PipelinePlan]] = None
         self._dynamic: Dict[str, PipelinePlan] = {}
@@ -655,7 +668,7 @@ def plan(
     tp_size: int = 1,
     dp_size: int = 1,
     measured: bool = False,
-    xla_temp_bytes: float = 0.0,
+    xla_temp_bytes: Optional[float] = None,
     cache: Optional[PlanCache] = None,
     use_cache: bool = True,
 ) -> PlanReport:
@@ -673,6 +686,13 @@ def plan(
     monotone cost-vs-budget frontier.
     """
     times = times or TimeModel.unit()
+    if xla_temp_bytes is None:
+        # the checked-in dryrun calibration, scaled to this run shape (the
+        # same resolution HBMPlanner applies; resolved here so the cache
+        # key reflects the charged value)
+        xla_temp_bytes = ActivationByteModel.from_config(
+            config, microbatch, seq_len, p, n_chunks=1, tp_size=tp_size
+        ).xla_temp_bytes
     if cache is None:
         cache = default_cache() if use_cache else PlanCache(None, enabled=False)
     key = cache.key(

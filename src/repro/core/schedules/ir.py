@@ -521,8 +521,12 @@ def compile_plan(schedule: Schedule) -> ExecutionPlan:
     # --- residual slots: per (stage, chunk), live [F tick, B tick] -- the
     # paper's accounting: B's true input-gradient VJP emits the compact M_W
     # context and the F->B residual is dead; wctx slots live [B tick, W tick]
-    # and carry the wgrad closure inputs (matmul input activations + upstream
-    # cotangents).  Slots are also allocated *jointly* across chunks per
+    # and carry the byte-minimal cut of the backward (wgrad matmul operands,
+    # folded cheap grads, and -- for split recurrences -- stacked per-step
+    # scan contexts; DESIGN.md Sec. 7).  Slot *counts* here are structure-
+    # agnostic interval colorings; slot *bytes* come from the executor's
+    # eval_shape pass, so a stacked context is just a bigger slot, never a
+    # different slot.  Slots are also allocated *jointly* across chunks per
     # stage: when the chunks' residual structures agree (the uniform-group
     # SPMD case) the executor shares one pool, so a stage holding chunk-0 and
     # chunk-1 residuals at different times does not pay for both peaks. ---- #

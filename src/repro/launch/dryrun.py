@@ -233,6 +233,50 @@ def dryrun_cell(arch_id, shape_id, multi_pod=False, schedule="zb-h2", verbose=Tr
     return result, lowered, compiled
 
 
+def write_calibration_table(results, path):
+    """Fold train-cell results into the checked-in planner calibration.
+
+    ``configs/xla_temp_calibration.json`` maps arch name -> the compiled
+    cell's XLA temp in excess of the modeled schedule bytes, plus the
+    calibration shape (per-device tokens, tp, p, schedule) so
+    ``repro.core.memory.default_xla_temp_bytes`` can scale it to a planned
+    run shape.  Existing entries for other archs are preserved, so the
+    grid can be (re)run arch-by-arch.
+    """
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        table = {}
+    from repro.core.memory import ActivationByteModel
+
+    for r in results:
+        if r.get("xla_temp_bytes") is None:
+            continue
+        cfg = get_config(r["arch"])
+        cell = SHAPES[r["shape"]]
+        # the calibration cell's modeled M_B unit: the scale reference for
+        # re-pricing the temp at other run shapes / reduced() variants
+        m_b_cal = ActivationByteModel.from_config(
+            cfg, r["microbatch"], cell.seq_len, r["p"],
+            n_chunks=2 if r["schedule"] == "zb-v" else 1, tp_size=r["tp"],
+        ).m_b_bytes
+        table[cfg.name] = {
+            "xla_temp_bytes": r["xla_temp_bytes"],
+            "modeled_schedule_bytes": r.get("modeled_schedule_bytes"),
+            "m_b_bytes": m_b_cal,
+            "tokens": r["microbatch"] * cell.seq_len,
+            "tp": r["tp"],
+            "p": r["p"],
+            "schedule": r["schedule"],
+            "shape": r["shape"],
+            "arch_id": r["arch"],
+        }
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    return table
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -240,6 +284,12 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--schedule", default="zb-h2", choices=["zb-h1", "zb-h2", "zb-v"])
     ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--calibration-out",
+        default=None,
+        help="merge train-cell xla_temp_bytes into this planner calibration "
+        "table (configs/xla_temp_calibration.json)",
+    )
     args = ap.parse_args()
 
     archs = ARCH_IDS if args.arch == "all" else [args.arch]
@@ -266,6 +316,8 @@ def main():
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
+    if args.calibration_out:
+        write_calibration_table(results, args.calibration_out)
     bad = [r for r in results if "error" in r]
     print(f"\n{len(results) - len(bad)}/{len(results)} cells OK")
     sys.exit(1 if bad else 0)

@@ -23,7 +23,13 @@ from jax.sharding import PartitionSpec as P
 
 PyTree = Any
 
-__all__ = ["stacked_param_specs", "shared_param_specs", "leaf_name"]
+__all__ = [
+    "stacked_param_specs",
+    "shared_param_specs",
+    "leaf_name",
+    "local_leaf_shape",
+    "tp_local_shapes",
+]
 
 _COL = {"wq", "wk", "wv", "wu", "wg", "wuq", "wuk", "wuv", "swu", "swg"}
 _ROW = {"wo", "wd", "swd"}
@@ -85,3 +91,51 @@ def shared_param_specs(shared: PyTree, tp: Optional[str]) -> PyTree:
         _spec_for(leaf_name(path), leaf.ndim, tp, ()) for path, leaf in flat
     ]
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------- #
+# byte-exact local shapes (planner accounting)
+# --------------------------------------------------------------------- #
+def local_leaf_shape(shape, spec: P, axis_sizes) -> tuple:
+    """The per-rank shard shape of one leaf under ``spec``.
+
+    ``axis_sizes`` maps mesh axis name -> size.  Dimensions the spec leaves
+    unsharded (or shards over an axis not in ``axis_sizes``) keep their
+    global extent; sharded dims divide exactly when divisible and round up
+    otherwise (the runtime pads before sharding).
+    """
+    out = list(shape)
+    for d, part in enumerate(spec):
+        if part is None:
+            continue
+        names = part if isinstance(part, tuple) else (part,)
+        div = 1
+        for nm in names:
+            div *= int(axis_sizes.get(nm, 1))
+        if div > 1:
+            out[d] = -(-out[d] // div)
+    return tuple(out)
+
+
+def tp_local_shapes(tree: PyTree, tp_size: int, lead_axes=()) -> PyTree:
+    """ShapeDtypeStructs of each leaf's *tp-local* shard, per these rules.
+
+    Used by the planner to price params / optimizer state per leaf instead
+    of uniformly dividing the tree total by the TP degree: replicated
+    leaves (norm gains, routers, masks, ``lam``, ``*_rep`` projections when
+    head counts do not divide tp) keep their full bytes on every rank.
+    ``lead_axes`` names leading dims to leave untouched (e.g. the
+    stage-stack axis).
+    """
+    tp_name = "_tp"
+    sizes = {tp_name: max(1, int(tp_size))}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = _spec_for(
+            leaf_name(path), leaf.ndim, tp_name if tp_size > 1 else None,
+            tuple(lead_axes),
+        )
+        shp = local_leaf_shape(tuple(leaf.shape), spec, sizes)
+        out.append(jax.ShapeDtypeStruct(shp, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

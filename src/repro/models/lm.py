@@ -168,7 +168,15 @@ class ChunkFBW(FBWModule):
     gradient from those contexts alone.
     """
 
-    def __init__(self, cfg: ArchConfig, p: int, n_chunks: int, ctx: ShardCtx, name: str):
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        p: int,
+        n_chunks: int,
+        ctx: ShardCtx,
+        name: str,
+        compact: Optional[bool] = None,
+    ):
         blocks, g = group_layout(cfg, p, n_chunks)
         lcfg = layer_cfg(cfg, ctx.tp_size)
         self.name = name
@@ -182,7 +190,7 @@ class ChunkFBW(FBWModule):
             return f
 
         self.mods = [
-            auto_fbw(block_fn(kinds), name=f"{name}.b{bi}")
+            auto_fbw(block_fn(kinds), name=f"{name}.b{bi}", compact=compact)
             for bi, kinds in enumerate(blocks)
         ]
 
@@ -332,7 +340,16 @@ def make_sink_fn(cfg: ArchConfig, ctx: ShardCtx, m: int):
 # --------------------------------------------------------------------- #
 # program factory
 # --------------------------------------------------------------------- #
-def build_program(cfg: ArchConfig, spec: RunSpec, placement) -> PipelineProgram:
+def build_program(
+    cfg: ArchConfig,
+    spec: RunSpec,
+    placement,
+    compact: Optional[bool] = None,
+) -> PipelineProgram:
+    """``compact`` selects the byte-minimal W-context split (core/passes);
+    the default follows ``auto_fbw``'s global default.  ``compact=False``
+    is the whole-scan-in-B / frontier-cut baseline the measured-memory
+    tests compare against."""
     ctx = ShardCtx(tp_axis=spec.tp_axis, tp_size=spec.tp_size)
     src_fwd, src_bwd_w = make_src(cfg, ctx)
     sink_fn = make_sink_fn(cfg, ctx, spec.m)
@@ -344,14 +361,17 @@ def build_program(cfg: ArchConfig, spec: RunSpec, placement) -> PipelineProgram:
         s_total = cfg.extras_dict()["n_patches"] + spec.seq_len
 
     chunks = [
-        ChunkFBW(cfg, spec.p, spec.n_chunks, ctx, name=f"{cfg.name}.chunk{c}")
+        ChunkFBW(
+            cfg, spec.p, spec.n_chunks, ctx,
+            name=f"{cfg.name}.chunk{c}", compact=compact,
+        )
         for c in range(spec.n_chunks)
     ]
     return PipelineProgram(
         chunks=chunks,
         src_fwd=src_fwd,
         src_bwd_w=src_bwd_w,
-        sink=auto_fbw(sink_fn, name=f"{cfg.name}.sink"),
+        sink=auto_fbw(sink_fn, name=f"{cfg.name}.sink", compact=compact),
         act_shape=(spec.microbatch, s_total, cfg.d_model),
         act_dtype=cfg.jdtype(),
     )

@@ -596,7 +596,22 @@ def init_rglru(key, cfg, dtype):
 
 
 def apply_rglru(p, x, cfg, ctx: ShardCtx):
-    """Gated linear recurrence via associative scan (TPU-parallel)."""
+    """Gated linear recurrence: h_t = a_t * h_{t-1} + gated_t.
+
+    Two recurrence forms, selected by ``cfg["rglru_scan"]``:
+
+      * ``"associative"`` (default): ``lax.associative_scan`` -- the
+        TPU-parallel log-depth form.  Its backward is a log-depth
+        slice/concat graph with *no* ``scan`` equation, so the recurrent
+        B/W split (core/passes.py) cannot recurse into a body; the dp slice
+        (the ``lam`` gate-scale grad) is instead handled by the generic
+        byte-minimal cut -- the "scanified dp fallback" is simply not
+        needing one.
+      * ``"sequential"``: an explicit ``lax.scan`` over time.  This routes
+        the recurrence through the scan-split path (dx-only B scan; any
+        dp-only outputs replayed at W), and keeps the backward graph
+        O(s) instead of O(s log s) -- preferable for very long sequences.
+    """
     b, s, h = x.shape
     xin = rmsnorm(p["ln"], x)
     u = xin @ p["rx"]
@@ -609,12 +624,25 @@ def apply_rglru(p, x, cfg, ctx: ShardCtx):
         jnp.float32
     )
 
-    def combine(l, r_):
-        a1, h1 = l
-        a2, h2 = r_
-        return a1 * a2, a2 * h1 + h2
+    if cfg.get("rglru_scan", "associative") == "sequential":
+        def step(hc, ag):
+            a_t, g_t = ag
+            hn = a_t * hc + g_t
+            return hn, hn
 
-    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        _, hs_t = jax.lax.scan(
+            step,
+            jnp.zeros((b, a.shape[-1]), jnp.float32),
+            (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)),
+        )
+        hs = hs_t.transpose(1, 0, 2)
+    else:
+        def combine(l, r_):
+            a1, h1 = l
+            a2, h2 = r_
+            return a1 * a2, a2 * h1 + h2
+
+        _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
     y = (hs.astype(x.dtype) * gate_y) @ p["ro"]
     return x + y
 

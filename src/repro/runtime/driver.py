@@ -88,9 +88,11 @@ def replan_under_budget(
     tp_size: int = 1,
     dp_size: int = 1,
     program_factory=None,
-    xla_temp_bytes: float = 0.0,
+    xla_temp_bytes: Optional[float] = None,
 ):
     """Re-plan the schedule when the per-device HBM budget changes.
+    ``xla_temp_bytes=None`` (default) charges the checked-in per-config
+    dryrun calibration, like launch-time planning.
 
     Runtime counterpart of launch-time planning (DESIGN.md Sec. 6): after an
     elastic reshard, a sequence-length bump, or a co-tenant claiming device

@@ -1,0 +1,83 @@
+"""Project-docs integrity (ISSUE 4 satellite): README/DESIGN link and
+verify-command checks, run by the CI docs job.
+
+Checks are structural, not stylistic: every repo-relative path either doc
+names must exist, the README's tier-1 verify command must match ROADMAP.md
+verbatim (one source of truth for "how do I check this repo"), and the
+DESIGN sections the in-tree docstrings cite must exist.
+"""
+
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = (ROOT / "README.md").read_text()
+DESIGN = (ROOT / "DESIGN.md").read_text()
+ROADMAP = (ROOT / "ROADMAP.md").read_text()
+
+# repo-relative paths that look like files/dirs: backtick-quoted tokens with
+# a slash or a known extension, minus command lines and glob/placeholder bits
+_PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|json|toml|yml))`")
+
+
+def _referenced_paths(text):
+    out = set()
+    for m in _PATH_RE.finditer(text):
+        p = m.group(1)
+        if p.startswith(("http", "-", "$")) or "*" in p:
+            continue
+        out.add(p.rstrip("/"))
+    return out
+
+
+def _exists(p: str) -> bool:
+    if any((c / p).exists() for c in (ROOT, ROOT / "src" / "repro")):
+        return True
+    if "/" not in p:  # bare file named in its package's context
+        return any(ROOT.rglob(p))
+    return False
+
+
+def test_readme_paths_exist():
+    missing = [p for p in sorted(_referenced_paths(README)) if not _exists(p)]
+    assert not missing, f"README.md names missing files: {missing}"
+
+
+def test_design_paths_exist():
+    missing = [p for p in sorted(_referenced_paths(DESIGN)) if not _exists(p)]
+    assert not missing, f"DESIGN.md names missing files: {missing}"
+
+
+def test_readme_verify_command_matches_roadmap():
+    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", ROADMAP)
+    assert m, "ROADMAP.md lost its tier-1 verify line"
+    assert m.group(1) in README, (
+        "README quickstart must carry the ROADMAP tier-1 verify command "
+        f"verbatim: {m.group(1)!r}"
+    )
+
+
+def test_readme_architecture_map_covers_packages():
+    src = ROOT / "src" / "repro"
+    pkgs = {
+        p.name
+        for p in src.iterdir()
+        if p.is_dir() and (p / "__init__.py").exists()
+    }
+    named = set(re.findall(r"^(\w+)/", README, flags=re.M))
+    missing = pkgs - named - {"__pycache__"}
+    assert not missing, f"README architecture map misses packages: {missing}"
+
+
+def test_design_sections_cited_by_docstrings_exist():
+    secs = set(re.findall(r"^## (\d+)\.", DESIGN, flags=re.M))
+    cited = set()
+    for py in (ROOT / "src").rglob("*.py"):
+        cited |= set(re.findall(r"DESIGN\.md Sec\.\s*(\d+)", py.read_text()))
+    missing = cited - secs
+    assert not missing, f"docstrings cite missing DESIGN sections: {missing}"
+
+
+def test_examples_named_in_readme_exist():
+    for m in re.finditer(r"examples/(\w+)\.py", README):
+        assert (ROOT / "examples" / f"{m.group(1)}.py").exists(), m.group(0)

@@ -155,6 +155,107 @@ def test_measured_family_ordering(p, m):
     assert acts["v-half"] <= acts["zb-v"] * (1 + 1e-9)
 
 
+def _per_block_wctx_bytes(cfg, compact):
+    """Measured per-block B->W context bytes through the real executor
+    buffer sizing (ChunkFBW + eval_shape), per block of chunk 0."""
+    p, m = 2, 4
+    spec = RunSpec(p=p, n_chunks=1, microbatch=2, seq_len=16, m=m)
+    sched = zb_h1(p, m)
+    plan = compile_plan(sched)
+    prog = build_program(cfg, spec, sched.placement, compact=compact)
+    exe = PipelineExecutor(prog, plan, pipe_axis="pipe")
+    stacked, shared = jax.eval_shape(
+        lambda: init_params(cfg, spec, sched.placement)
+    )
+    sp = tuple(
+        jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), s
+        )
+        for s in stacked
+    )
+    side = jax.eval_shape(lambda: side_inputs(cfg, spec))
+    bb = exe.buffer_bytes(sp, shared, side)
+    return prog.chunks[0].block_kinds, list(bb["wctx_block_bytes"][0])
+
+
+RECURRENT_KINDS = {"slstm", "mlstm", "rglru"}
+
+
+@pytest.mark.parametrize("arch", ["xlstm_350m", "recurrentgemma_9b"])
+def test_recurrent_wctx_shrinks_30pct_measured(arch):
+    """ISSUE 4 acceptance: for the xlstm-350m and recurrentgemma-9b tiny
+    variants, measured per-block W-context bytes of every *recurrent*
+    block shrink >= 30% under the compact split vs. the pre-split
+    (whole-scan-in-B) baseline."""
+    import importlib
+
+    cfg = importlib.import_module(f"repro.configs.{arch}").reduced()
+    kinds, base = _per_block_wctx_bytes(cfg, compact=False)
+    kinds2, compact = _per_block_wctx_bytes(cfg, compact=True)
+    assert kinds == kinds2
+    checked = 0
+    for bk, b0, b1 in zip(kinds, base, compact):
+        if not (set(bk) & RECURRENT_KINDS):
+            continue
+        checked += 1
+        assert b1 <= 0.70 * b0, (
+            f"{arch} block {bk}: compact wctx {b1}B > 70% of "
+            f"whole-scan-in-B baseline {b0}B"
+        )
+    assert checked > 0  # the reduced configs keep their recurrent blocks
+
+
+def test_planner_sees_smaller_recurrent_m_w():
+    """plan()'s itemized breakdown reflects the smaller M_W: measured
+    fidelity on the compact program prices wctx below the frontier
+    baseline program, and the analytic model agrees directionally."""
+    from repro.core.planner import HBMPlanner
+
+    cfg = TINY_RECURRENT
+    p, m = 4, 8
+
+    def factory(compact):
+        def make(n_chunks):
+            spec = RunSpec(p=p, n_chunks=n_chunks, microbatch=2, seq_len=8, m=m)
+            pl = (zb_v(p, m) if n_chunks == 2 else one_f_one_b(p, m)).placement
+            prog = build_program(cfg, spec, pl, compact=compact)
+            stacked, shared = jax.eval_shape(
+                lambda: init_params(cfg, spec, pl)
+            )
+            sp = tuple(
+                jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), s
+                )
+                for s in stacked
+            )
+            return prog, sp, shared, jax.eval_shape(
+                lambda: side_inputs(cfg, spec)
+            )
+
+        return make
+
+    wctx = {}
+    for compact in (False, True):
+        planner = HBMPlanner(
+            cfg, p=p, m=m, microbatch=2, seq_len=8,
+            measured=True, program_factory=factory(compact),
+        )
+        report = planner.plan(float("inf"))
+        assert report.feasible
+        by_name = {c.name: c for c in report.plans if c.schedule is not None}
+        wctx[compact] = by_name["zb-h1"].breakdown.wctx
+    assert wctx[True] < wctx[False]
+
+    analytic_compact = ActivationByteModel.from_config(
+        cfg, 2, 8, p, compact=True
+    )
+    analytic_frontier = ActivationByteModel.from_config(
+        cfg, 2, 8, p, compact=False
+    )
+    assert analytic_compact.m_w_bytes < analytic_frontier.m_w_bytes
+    assert analytic_compact.m_b_bytes == analytic_frontier.m_b_bytes
+
+
 def test_wctx_is_smaller_than_full_retention():
     """M_W < M_B: the split's W-context beats keeping residuals F->W.
 

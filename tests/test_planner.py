@@ -291,6 +291,94 @@ def test_calibrate_from_dryrun_tolerance():
         )
 
 
+def test_checked_in_calibration_table_loads_and_scales():
+    """The shipped {arch: xla_temp} table (ROADMAP open item 1) feeds the
+    byte model by default, scaled to the run shape and never upward."""
+    import json
+    import pathlib
+
+    from repro.configs import get_config
+    from repro.core.memory import default_xla_temp_bytes
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    table = json.loads(
+        (root / "src/repro/configs/xla_temp_calibration.json").read_text()
+    )
+    assert len(table) >= 10  # the full train grid is calibrated
+    for name, rec in table.items():
+        assert rec["xla_temp_bytes"] > 0
+        assert rec["m_b_bytes"] > 0
+
+    cfg = get_config("gpt3_1_5b")
+    rec = table[cfg.name]
+    # exactly the raw value at the calibration cell's own shape
+    at_cal = default_xla_temp_bytes(
+        cfg.name, tokens=rec["tokens"], m_b_bytes=rec["m_b_bytes"]
+    )
+    assert at_cal == pytest.approx(rec["xla_temp_bytes"])
+    # smaller shapes scale down, larger shapes never extrapolate upward
+    half = default_xla_temp_bytes(
+        cfg.name, tokens=rec["tokens"] // 2, m_b_bytes=rec["m_b_bytes"] / 2
+    )
+    assert half == pytest.approx(rec["xla_temp_bytes"] / 2)
+    big = default_xla_temp_bytes(
+        cfg.name, tokens=rec["tokens"] * 4, m_b_bytes=rec["m_b_bytes"] * 4
+    )
+    assert big <= rec["xla_temp_bytes"] * (1 + 1e-9)
+    assert default_xla_temp_bytes("no-such-arch", tokens=1) == 0.0
+
+    # from_config folds it in; the planner charges it by default
+    bm = ActivationByteModel.from_config(cfg, 1, 2048, 4)
+    assert bm.xla_temp_bytes > 0
+    planner = HBMPlanner(cfg, p=4, m=8, microbatch=1, seq_len=2048)
+    assert planner.xla_temp_bytes == pytest.approx(bm.xla_temp_bytes)
+    # reduced() variants share the name but price proportionally smaller
+    import repro.configs.gpt3_1_5b as mod
+
+    if hasattr(mod, "reduced"):
+        red = ActivationByteModel.from_config(mod.reduced(), 2, 8, 4)
+        assert red.xla_temp_bytes < bm.xla_temp_bytes / 100
+
+
+def test_tp_param_bytes_per_leaf_not_uniform():
+    """tp>1 params/optimizer derive from sharding_rules specs per leaf:
+    replicated leaves (norms, lam, recurrent weights) keep full bytes, so
+    the total sits strictly between full/tp and full."""
+    from repro.core.planner import fixed_state_bytes
+
+    for arch in ("gpt3_1_5b", "xlstm_350m"):
+        cfg = __import__(
+            f"repro.configs.{arch}", fromlist=["reduced"]
+        ).reduced()
+        p1, o1 = fixed_state_bytes(cfg, p=2, n_chunks=1, tp_size=1)
+        p2, o2 = fixed_state_bytes(cfg, p=2, n_chunks=1, tp_size=2)
+        assert p1 / 2 < p2 < p1, (arch, p1, p2)
+        assert o1 / 2 < o2 < o1, (arch, o1, o2)
+    # xlstm keeps its recurrent weights replicated: far less tp benefit
+    # than the dense transformer at the same degree
+    gpt = __import__("repro.configs.gpt3_1_5b", fromlist=["reduced"]).reduced()
+    xl = __import__("repro.configs.xlstm_350m", fromlist=["reduced"]).reduced()
+    g1, _ = fixed_state_bytes(gpt, 2, 1, tp_size=1)
+    g2, _ = fixed_state_bytes(gpt, 2, 1, tp_size=2)
+    x1, _ = fixed_state_bytes(xl, 2, 1, tp_size=1)
+    x2, _ = fixed_state_bytes(xl, 2, 1, tp_size=2)
+    assert (x2 / x1) > (g2 / g1)
+
+
+def test_local_leaf_shape_rules():
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.launch.sharding_rules import local_leaf_shape
+
+    assert local_leaf_shape((8, 6), PS(None, "tp"), {"tp": 2}) == (8, 3)
+    assert local_leaf_shape((8, 6), PS("tp"), {"tp": 2}) == (4, 6)
+    assert local_leaf_shape((8, 6), PS(), {"tp": 2}) == (8, 6)
+    # padded division rounds up (runtime pads before sharding)
+    assert local_leaf_shape((7,), PS("tp"), {"tp": 2}) == (4,)
+    # unknown axis names leave the dim whole
+    assert local_leaf_shape((8,), PS("other"), {"tp": 2}) == (8,)
+
+
 # --------------------------------------------------------------------- #
 # straggler-facing family search
 # --------------------------------------------------------------------- #
