@@ -233,6 +233,12 @@ def main():
     ap.add_argument("--out", default=OUT)
     args = ap.parse_args()
 
+    if args.wall_clock:
+        # repeated wall-clock sweeps skip recompiles ($REPRO_JAX_CACHE_DIR)
+        from repro.launch.compile_cache import enable_persistent_cache
+
+        enable_persistent_cache()
+
     result = {}
     for arch in args.configs.split(","):
         arch = arch.strip()

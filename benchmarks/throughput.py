@@ -1,0 +1,256 @@
+"""Measured training throughput: generic vs specialized tick executor.
+
+Runs the full jitted train step (pipeline executor + postval AdamW) for
+each schedule family on a fake-device mesh, in both executor compilation
+modes (DESIGN.md Sec. 8):
+
+  * ``scan``        -- the generic one-tick-body executor (baseline),
+  * ``specialized`` -- trace-time specialization against the static plan.
+
+Reports steady-state steps/s (min-of-repeats wall time, first compile
+excluded and recorded separately) and asserts the two modes are
+*bit-identical*: same loss, same grad norm, same updated parameters.
+
+Writes ``BENCH_throughput.json`` -- the repo's perf trajectory; CI runs
+the smoke point and fails when the specialized executor is slower than
+the generic one (``--enforce``).
+
+Example (the CI smoke point):
+  python benchmarks/throughput.py --smoke --enforce
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+# the host device count must be pinned before jax initializes (import side
+# effect).  Append to any pre-existing XLA_FLAGS rather than setdefault:
+# dropping the flag would leave device_count()==1 and fail mesh creation.
+_P_DEFAULT = 8
+if "--help" not in sys.argv and "-h" not in sys.argv:
+    _p = _P_DEFAULT
+    for i, a in enumerate(sys.argv):
+        if a == "--p" and i + 1 < len(sys.argv):
+            _p = int(sys.argv[i + 1])
+        elif a.startswith("--p="):
+            _p = int(a.split("=", 1)[1])
+    _cur = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _cur:
+        os.environ["XLA_FLAGS"] = (
+            f"{_cur} --xla_force_host_platform_device_count={_p}".strip()
+        )
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--p", type=int, default=_P_DEFAULT)
+    ap.add_argument("--m", type=int, default=16)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument(
+        "--schedules",
+        default="1f1b,zb-h1,zb-v,v-min",
+        help="comma-separated schedule families",
+    )
+    ap.add_argument("--steps", type=int, default=8, help="timed steps per rep")
+    ap.add_argument("--reps", type=int, default=3, help="take the fastest rep")
+    ap.add_argument("--out", default=None, help="default: repo-root BENCH_throughput.json")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI-sized run: fewer timed steps, smaller m",
+    )
+    ap.add_argument(
+        "--enforce",
+        action="store_true",
+        help="exit 1 when the specialized executor is not faster than the "
+        "generic scan executor (geomean over families)",
+    )
+    return ap.parse_args()
+
+
+def build_step(cfg, spec, plan, placement, mesh, binding, mode):
+    from repro.launch.steps import TrainStepConfig, build_train_step
+
+    tcfg = TrainStepConfig(executor_mode=mode, donate=True)
+    make, _ = build_train_step(cfg, spec, plan, placement, mesh, binding, tcfg)
+    return make
+
+
+def init_state(cfg, spec, placement):
+    from repro.models.lm import init_params
+    from repro.optim import adamw
+
+    stacked, shared = init_params(cfg, spec, placement)
+    return stacked, shared, adamw.init(stacked), adamw.init(shared)
+
+
+def copy_state(state):
+    return jax.tree_util.tree_map(jnp.copy, state)
+
+
+def main():
+    args = parse_args()
+    if args.smoke:
+        args.m = min(args.m, 12)
+        args.steps = min(args.steps, 5)
+        args.reps = min(args.reps, 2)
+
+    from repro.configs import get_reduced
+    from repro.core.schedules import compile_plan
+    from repro.data import DataConfig, SyntheticLM
+    from repro.launch.compile_cache import enable_persistent_cache
+    from repro.launch.mesh import AxisBinding
+    from repro.launch.train import SCHEDULES, side_from_batch
+    from repro.models.lm import RunSpec
+
+    cache_dir = enable_persistent_cache()
+    cfg = get_reduced(args.arch)
+    p, m = args.p, args.m
+    mesh = jax.make_mesh((p,), ("data",))
+    binding = AxisBinding(pipe="data", tp=None, dp=None)
+
+    results = []
+    speedups = []
+    for sched_name in args.schedules.split(","):
+        sched = SCHEDULES[sched_name](p, m)
+        plan = compile_plan(sched)
+        sw = plan.steady_window()
+        spec = RunSpec(
+            p=p,
+            n_chunks=sched.n_chunks,
+            microbatch=args.microbatch,
+            seq_len=args.seq_len,
+            m=m,
+        )
+        data = SyntheticLM(
+            DataConfig(
+                global_batch=m * args.microbatch,
+                seq_len=args.seq_len,
+                vocab=cfg.vocab,
+            )
+        )
+        side = side_from_batch(data.batch_at(0), spec, cfg=cfg)
+        state0 = init_state(cfg, spec, sched.placement)
+
+        per_mode = {}
+        parity = {}
+        for mode in ("scan", "specialized"):
+            make = build_step(
+                cfg, spec, plan, sched.placement, mesh, binding, mode
+            )
+            step = make(side)
+
+            # compile + first step (the jitted step donates its inputs, so
+            # every call gets a fresh copy of the identical initial state)
+            t0 = time.perf_counter()
+            out = step(*copy_state(state0), side)
+            jax.block_until_ready(out)
+            compile_s = time.perf_counter() - t0
+
+            parity[mode] = dict(
+                loss=np.asarray(out[4]["loss"]).item(),
+                grad_norm=np.asarray(out[4]["grad_norm"]).item(),
+                params=[
+                    np.asarray(l)
+                    for l in jax.tree_util.tree_leaves(out[0])
+                ],
+            )
+
+            # steady-state timing: chain the state through timed steps;
+            # min over reps rejects scheduler noise on shared CI hosts
+            chained = out[:4]
+            best = math.inf
+            for _ in range(args.reps):
+                t0 = time.perf_counter()
+                for _ in range(args.steps):
+                    o = step(*chained, side)
+                    chained = o[:4]
+                jax.block_until_ready(chained)
+                best = min(best, (time.perf_counter() - t0) / args.steps)
+            per_mode[mode] = dict(
+                step_time_s=best,
+                steps_per_s=1.0 / best,
+                compile_s=compile_s,
+            )
+            print(
+                f"{sched_name:8s} {mode:12s} step {best*1e3:8.2f} ms  "
+                f"({1.0/best:6.2f} steps/s)  compile {compile_s:6.1f}s"
+            )
+
+        # -- bit-identical parity across executor modes ------------------- #
+        a, b = parity["scan"], parity["specialized"]
+        assert a["loss"] == b["loss"], (
+            f"{sched_name}: loss differs {a['loss']} vs {b['loss']}"
+        )
+        assert a["grad_norm"] == b["grad_norm"], f"{sched_name}: grad_norm differs"
+        for la, lb in zip(a["params"], b["params"]):
+            np.testing.assert_array_equal(la, lb)
+        print(f"{sched_name:8s} parity: bit-identical loss/grads/params")
+
+        speedup = (
+            per_mode["scan"]["step_time_s"]
+            / per_mode["specialized"]["step_time_s"]
+        )
+        speedups.append(speedup)
+        results.append(
+            dict(
+                schedule=sched_name,
+                n_ticks=plan.n_ticks,
+                steady_window=(
+                    dict(start=sw.start, period=sw.period, repeats=sw.repeats)
+                    if sw
+                    else None
+                ),
+                generic=per_mode["scan"],
+                specialized=per_mode["specialized"],
+                speedup=speedup,
+                loss=a["loss"],
+                parity_bit_identical=True,
+            )
+        )
+        print(f"{sched_name:8s} speedup x{speedup:.2f}")
+
+    geomean = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+    payload = dict(
+        benchmark="throughput",
+        config=dict(
+            arch=cfg.name,
+            reduced=True,
+            p=p,
+            m=m,
+            microbatch=args.microbatch,
+            seq_len=args.seq_len,
+            steps=args.steps,
+            reps=args.reps,
+            backend=jax.default_backend(),
+            devices=jax.device_count(),
+            compile_cache=cache_dir,
+        ),
+        results=results,
+        geomean_speedup=geomean,
+    )
+    out_path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_throughput.json"
+    )
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"geomean speedup x{geomean:.2f} -> {os.path.abspath(out_path)}")
+
+    if args.enforce and geomean <= 1.0:
+        print("FAIL: specialized executor is not faster than generic")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

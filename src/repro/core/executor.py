@@ -5,11 +5,16 @@ auto-searched -- as one SPMD program:
 
   * time is quantized into *ticks*; at tick t every stage looks up its op in
     the static ``(p, T)`` tables compiled from the schedule and
-    ``lax.switch``es into the F / B / W / idle branch for the op's chunk;
+    ``lax.switch``es into the F / B / W / idle branch for the op's chunk
+    (generic modes) -- or, in the ``specialized`` mode, each tick is traced
+    against its host-constant table column: direct branch calls, per-tick
+    constant folding, and a steady-state scan superstep (DESIGN.md Sec. 8);
   * activations and activation-gradients cross stages through four
     collective-permute channels (F-up, F-down, B-down, B-up), closed once per
     tick *outside* the switch (pipe-axis collectives must be unconditional
-    under SPMD); channels a schedule never uses are pruned at trace time;
+    under SPMD); channels a schedule never uses are pruned at trace time,
+    and the specialized mode emits a permute only on (tick, channel) pairs
+    where the plan actually communicates, with exact sender/receiver edges;
   * per-stage state lives in slot-addressed buffers whose sizes come from the
     plan's interval analysis: activation/gradient inboxes, residuals (F->B,
     freed when B completes -- the paper's accounting), weight-grad contexts
@@ -105,13 +110,35 @@ def _dyn_set(buf: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
 
 
 def _masked_set(buf, idx, val, active):
-    """In-place slot write that keeps the old value when inactive."""
+    """In-place slot write that keeps the old value when inactive.
+
+    ``active`` may be a Python/numpy bool (the specialized executor bakes
+    per-tick constants): True folds to a plain slot write, False to a
+    no-op, so statically-dead writes never reach XLA.
+    """
+    if isinstance(active, (bool, np.bool_)):
+        if not active:
+            return buf
+        return _dyn_set(buf, idx, val.astype(buf.dtype))
     old = _dyn_get(buf, idx)
     act = jnp.asarray(active)
     sel = jnp.where(
         act.reshape((1,) * val.ndim) if val.ndim else act, val, old
     ).astype(buf.dtype)
     return _dyn_set(buf, idx, sel)
+
+
+def _maybe_cond(pred, true_fn, false_fn, operand):
+    """``lax.cond`` that folds at trace time on a host-constant predicate.
+
+    The branch bodies are written once and reused by both executor modes;
+    under specialization the per-tick flags arrive as Python bools and the
+    untaken side must not be traced at all (it may index buffers that the
+    plan proves dead at this tick).
+    """
+    if isinstance(pred, (bool, np.bool_)):
+        return true_fn(operand) if pred else false_fn(operand)
+    return jax.lax.cond(pred, true_fn, false_fn, operand)
 
 
 def _tree_dyn_get(bufs: PyTree, idx) -> PyTree:
@@ -146,6 +173,8 @@ class PipelineExecutor:
         shard_channels: bool = False,
         fuse_wgrad: bool = True,
         tp_size: Optional[int] = None,
+        mode: Optional[str] = None,
+        steady_scan: bool = True,
     ):
         if program.n_chunks() != plan.n_chunks:
             raise ValueError(
@@ -156,6 +185,20 @@ class PipelineExecutor:
         self.plan = plan
         self.pipe_axis = pipe_axis
         self.unroll = unroll
+        # Compilation mode (DESIGN.md Sec. 8):
+        #   "scan"        -- one generic tick body inside lax.scan; every tick
+        #                    pays the full switch + all live channels;
+        #   "unroll"      -- the generic tick unrolled (legacy unroll=True);
+        #   "specialized" -- each tick traced against its host-constant plan
+        #                    column: direct branch calls, exact-edge permutes
+        #                    only where the plan communicates, and the steady
+        #                    window compiled once inside a scan superstep.
+        if mode is None:
+            mode = "unroll" if unroll else "scan"
+        if mode not in ("scan", "unroll", "specialized"):
+            raise ValueError(f"unknown executor mode {mode!r}")
+        self.mode = mode
+        self.steady_scan = steady_scan
         self.channels = (
             plan.used_channels() if prune_channels else tuple(range(N_CHANNELS))
         )
@@ -355,37 +398,8 @@ class PipelineExecutor:
             share_res = self._uniform(res_sh)
             share_wctx = self._uniform(wctx_sh)
 
-            # -- local tick tables ----------------------------------------- #
+            # -- stage index (tick tables are gathered per mode below) ------ #
             sidx = jax.lax.axis_index(self.pipe_axis)
-
-            def row(tab):
-                return jnp.asarray(tab)[sidx]
-
-            xs = dict(
-                kind=row(plan.op_kind),
-                chunk=row(plan.op_chunk),
-                mb=row(plan.op_mb),
-                in_slot=row(plan.op_in_slot),
-                res_slot=row(
-                    plan.op_res_slot_joint if share_res else plan.op_res_slot
-                ),
-                wctx_slot=row(
-                    plan.op_wctx_slot_joint if share_wctx else plan.op_wctx_slot
-                ),
-                sink_slot=row(plan.op_sink_slot),
-                sink_wctx_slot=row(plan.op_sink_wctx_slot),
-                is_src=row(plan.op_is_src),
-                is_loss=row(plan.op_is_loss),
-                is_last_b=row(plan.op_is_last_b),
-                send_channel=row(plan.send_channel),
-                send_local=row(plan.send_local),
-                local_chunk=row(plan.local_chunk),
-                local_slot=row(plan.local_slot),
-                local_is_grad=row(plan.local_is_grad),
-                recv_valid=row(plan.recv_valid),
-                recv_chunk=row(plan.recv_chunk),
-                recv_slot=row(plan.recv_slot),
-            )
 
             # -- buffers ----------------------------------------------------- #
             S_act = max(plan.n_act_slots)
@@ -504,7 +518,7 @@ class PipelineExecutor:
                     def from_src(_):
                         return prog.src_fwd(shared, side_mb).astype(prog.act_dtype)
 
-                    x = jax.lax.cond(
+                    x = _maybe_cond(
                         t["is_src"], from_src, lambda _: x_inbox, None
                     )
                     y, res = prog.chunks[c].fwd(stage_params[c], x, side_mb)
@@ -524,7 +538,7 @@ class PipelineExecutor:
                         st["loss"] = st["loss"] + loss.astype(st["loss"].dtype)
                         return st
 
-                    state = jax.lax.cond(
+                    state = _maybe_cond(
                         t["is_loss"], with_loss, lambda st: st, state
                     )
                     return state, y.astype(prog.act_dtype)
@@ -556,7 +570,7 @@ class PipelineExecutor:
                             )
                             return dy_inbox, zeros
 
-                        dy, swctx_val = jax.lax.cond(
+                        dy, swctx_val = _maybe_cond(
                             t["is_loss"], from_sink, from_inbox, None
                         )
                         state["sink_wctx"] = jax.tree_util.tree_map(
@@ -591,7 +605,7 @@ class PipelineExecutor:
                             )
                             return st
 
-                        state = jax.lax.cond(
+                        state = _maybe_cond(
                             t["is_last_b"], embed_grads, lambda st: st, state
                         )
                     return state, dx.astype(prog.act_dtype)
@@ -632,7 +646,7 @@ class PipelineExecutor:
                             )
                             return st
 
-                        state = jax.lax.cond(
+                        state = _maybe_cond(
                             t["is_loss"], sink_grads, lambda st: st, state
                         )
                     return state, zero_act
@@ -708,12 +722,27 @@ class PipelineExecutor:
                 for sp in stage_params
             )
 
-            if self.unroll:
+            if self.mode == "specialized":
+                state = self._run_specialized(
+                    state0,
+                    branches,
+                    sidx,
+                    share_res,
+                    share_wctx,
+                    S_act,
+                    S_grad,
+                    chan_shape,
+                    to_chan,
+                    zero_act,
+                )
+            elif self.mode == "unroll":
+                xs = self._tick_rows(sidx, share_res, share_wctx)
                 state = state0
                 for t_i in range(plan.n_ticks):
                     t = jax.tree_util.tree_map(lambda a: a[t_i], xs)
                     state, _ = tick(state, t)
             else:
+                xs = self._tick_rows(sidx, share_res, share_wctx)
                 state, _ = jax.lax.scan(
                     tick, state0, xs, length=plan.n_ticks
                 )
@@ -724,3 +753,232 @@ class PipelineExecutor:
             return grads, shared_grads, loss
 
         return grad_fn
+
+    # ------------------------------------------------------------------ #
+    # generic modes: per-stage (T,)-rows of the tick tables
+    # ------------------------------------------------------------------ #
+    def _tick_rows(self, sidx, share_res, share_wctx):
+        plan = self.plan
+
+        def row(tab):
+            return jnp.asarray(tab)[sidx]
+
+        return dict(
+            kind=row(plan.op_kind),
+            chunk=row(plan.op_chunk),
+            mb=row(plan.op_mb),
+            in_slot=row(plan.op_in_slot),
+            res_slot=row(
+                plan.op_res_slot_joint if share_res else plan.op_res_slot
+            ),
+            wctx_slot=row(
+                plan.op_wctx_slot_joint if share_wctx else plan.op_wctx_slot
+            ),
+            sink_slot=row(plan.op_sink_slot),
+            sink_wctx_slot=row(plan.op_sink_wctx_slot),
+            is_src=row(plan.op_is_src),
+            is_loss=row(plan.op_is_loss),
+            is_last_b=row(plan.op_is_last_b),
+            send_channel=row(plan.send_channel),
+            send_local=row(plan.send_local),
+            local_chunk=row(plan.local_chunk),
+            local_slot=row(plan.local_slot),
+            local_is_grad=row(plan.local_is_grad),
+            recv_valid=row(plan.recv_valid),
+            recv_chunk=row(plan.recv_chunk),
+            recv_slot=row(plan.recv_slot),
+        )
+
+    # ------------------------------------------------------------------ #
+    # specialized mode: trace each tick against its host-constant column
+    # ------------------------------------------------------------------ #
+    def _run_specialized(
+        self,
+        state0,
+        branches,
+        sidx,
+        share_res,
+        share_wctx,
+        S_act,
+        S_grad,
+        chan_shape,
+        to_chan,
+        zero_act,
+    ):
+        """Unroll the tick stream with per-tick Python constants.
+
+        Per tick: the (kind, chunk) column selects a *direct* branch call
+        (or a 2-way ``cond`` / minimal ``switch`` when stages disagree);
+        a ``ppermute`` is emitted only for (tick, channel) pairs where the
+        plan actually sends, with the exact (sender, receiver) edge list;
+        slot indices uniform across the participating stages become static
+        update indices.  The steady window (``plan.steady_window()``)
+        compiles once inside a ``lax.scan`` superstep with the microbatch
+        advanced by ``mb_delta`` per period, bounding trace size at large
+        ``p*m``.  Arithmetic, op order, and accumulation order are
+        identical to the generic modes, so results are bit-identical.
+        """
+        plan = self.plan
+        C = plan.n_chunks
+        p = plan.p
+
+        def pscal(vec, mask=None):
+            """(p,) column -> per-stage scalar.  Host columns fold to a
+            Python constant when the participating stages agree (static
+            slot indices); traced columns (scanned steady-state inputs)
+            and disagreeing stages become a tiny gather by stage index."""
+            if isinstance(vec, jax.Array):
+                return vec[sidx]
+            v = np.asarray(vec)
+            sel = v if mask is None else v[mask]
+            if sel.size and (sel == sel.flat[0]).all():
+                return sel.flat[0].item()
+            return jnp.asarray(v)[sidx]
+
+        def _pred(mask):
+            return True if mask.all() else jnp.asarray(mask)[sidx]
+
+        def make_t(col, mask):
+            return dict(
+                mb=pscal(col["op_mb"], mask),
+                in_slot=pscal(col["op_in_slot"], mask),
+                res_slot=pscal(
+                    col["op_res_slot_joint"]
+                    if share_res
+                    else col["op_res_slot"],
+                    mask,
+                ),
+                wctx_slot=pscal(
+                    col["op_wctx_slot_joint"]
+                    if share_wctx
+                    else col["op_wctx_slot"],
+                    mask,
+                ),
+                sink_slot=pscal(col["op_sink_slot"], mask),
+                sink_wctx_slot=pscal(col["op_sink_wctx_slot"], mask),
+                is_src=pscal(col["op_is_src"], mask),
+                is_loss=pscal(col["op_is_loss"], mask),
+                is_last_b=pscal(col["op_is_last_b"], mask),
+            )
+
+        def branch_vec(col):
+            kind, chunk = col["op_kind"], col["op_chunk"]
+            base = np.where(
+                kind == int(OpKind.F),
+                1,
+                np.where(kind == int(OpKind.B), 1 + C, 1 + 2 * C),
+            )
+            return np.where(kind == int(OpKind.IDLE), 0, base + chunk)
+
+        def spec_tick(state, col):
+            bidx = branch_vec(col)
+            used = sorted(set(bidx.tolist()))
+
+            def wrap(u):
+                if u == 0:
+                    return lambda st: (st, zero_act)
+                tu = make_t(col, bidx == u)
+                return lambda st: branches[u](st, tu)
+
+            if used == [0]:
+                send = zero_act
+            elif len(used) == 1:
+                state, send = wrap(used[0])(state)
+            elif len(used) == 2:
+                pred = jnp.asarray(bidx == used[1])[sidx]
+                state, send = jax.lax.cond(
+                    pred, wrap(used[1]), wrap(used[0]), state
+                )
+            else:
+                lut = np.searchsorted(used, bidx)
+                state, send = jax.lax.switch(
+                    jnp.asarray(lut)[sidx], [wrap(u) for u in used], state
+                )
+
+            # -- communication: exactly what the plan does at this tick --- #
+            live = [
+                d for d in self.channels if (col["send_channel"] == d).any()
+            ]
+            any_local = bool(col["send_local"].any())
+            if not live and not any_local:
+                return state
+            send_val = to_chan(send)
+            flat_a = state["act_in"].reshape((-1,) + chan_shape)
+            flat_g = state["grad_in"].reshape((-1,) + chan_shape)
+            if any_local:
+                la = col["send_local"] & ~col["local_is_grad"]
+                lg = col["send_local"] & col["local_is_grad"]
+                if la.any():
+                    idx = col["local_chunk"] * S_act + col["local_slot"]
+                    flat_a = _masked_set(
+                        flat_a, pscal(idx, la), send_val, _pred(la)
+                    )
+                if lg.any():
+                    idx = col["local_chunk"] * S_grad + col["local_slot"]
+                    flat_g = _masked_set(
+                        flat_g, pscal(idx, lg), send_val, _pred(lg)
+                    )
+            for d in live:
+                shift = _CHANNEL_SHIFT[d]
+                senders = np.nonzero(col["send_channel"] == d)[0]
+                edges = [(int(s), int((s + shift) % p)) for s in senders]
+                got = jax.lax.ppermute(send_val, self.pipe_axis, edges)
+                valid = col["recv_valid"][:, d]
+                is_act_chan = d in (CHANNEL_FWD_UP, CHANNEL_FWD_DOWN)
+                stride = S_act if is_act_chan else S_grad
+                ridx = col["recv_chunk"][:, d] * stride + col["recv_slot"][:, d]
+                if is_act_chan:
+                    flat_a = _masked_set(
+                        flat_a, pscal(ridx, valid), got, _pred(valid)
+                    )
+                else:
+                    flat_g = _masked_set(
+                        flat_g, pscal(ridx, valid), got, _pred(valid)
+                    )
+            state = dict(state)
+            state["act_in"] = flat_a.reshape((C, S_act) + chan_shape)
+            state["grad_in"] = flat_g.reshape((C, S_grad) + chan_shape)
+            return state
+
+        cols = [plan.tick_column(t) for t in range(plan.n_ticks)]
+        sw = plan.steady_window() if self.steady_scan else None
+        state = state0
+        if sw is not None and sw.repeats >= 2:
+            for t_i in range(sw.start):
+                state = spec_tick(state, cols[t_i])
+
+            # Split each tick-in-period's tables into host constants
+            # (identical in every period -- all structural tables are, by
+            # the window's definition, and slot tables often too) and
+            # per-period scanned inputs (cycling slot ids, microbatch ids).
+            const_cols: List[Dict[str, Any]] = []
+            var_cols: List[Dict[str, jax.Array]] = []
+            for i in range(sw.period):
+                ticks = [sw.start + i + j * sw.period for j in range(sw.repeats)]
+                cc: Dict[str, Any] = {}
+                vv: Dict[str, jax.Array] = {}
+                for name in ExecutionPlan._TICK_TABLES:
+                    stack = np.stack(
+                        [getattr(plan, name)[:, t] for t in ticks]
+                    )
+                    if (stack == stack[0]).all():
+                        cc[name] = stack[0]
+                    else:
+                        vv[name] = jnp.asarray(stack)
+                const_cols.append(cc)
+                var_cols.append(vv)
+
+            def superstep(st, xs_i):
+                for i in range(sw.period):
+                    col = dict(const_cols[i])
+                    col.update(xs_i[i])
+                    st = spec_tick(st, col)
+                return st, None
+
+            state, _ = jax.lax.scan(superstep, state, var_cols)
+            tail = range(sw.stop, plan.n_ticks)
+        else:
+            tail = range(plan.n_ticks)
+        for t_i in tail:
+            state = spec_tick(state, cols[t_i])
+        return state

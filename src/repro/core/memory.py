@@ -183,6 +183,11 @@ def memory_timeline(
 # --------------------------------------------------------------------- #
 _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
 
+# query-block size of models/modules.attention: sequences up to 2 * block
+# take the dense path and store the per-head (s, s) probabilities; longer
+# ones are q-block-chunked with remat and keep O(s * d) residuals.
+_ATTN_CHUNK_BLOCK = 1024
+
 # W-context / stored-activation ratios per kind bucket, calibrated against
 # the measured tiny-config grid (tests/test_split_blocks.py::
 # test_compact_context_shrinks_recurrent_blocks).  "compact" is the
@@ -267,7 +272,9 @@ class ActivationByteModel:
     block kind stores
 
       * attention-like (attn/attn_local/mla): inputs + projections
-        ~ (4*d_model + 2*kv) where kv = n_kv_heads * head_dim,
+        ~ (4*d_model + 2*kv) where kv = n_kv_heads * head_dim, plus the
+        O(s^2) scores term ``n_heads * s`` per token when the sequence
+        takes the dense path (s <= 2048; the chunked path remats it),
       * MLP-like (mlp/moe): input + hidden ~ (d_model + 2*d_ff')
         with d_ff' the *activated* expert width for MoE,
       * recurrent (slstm/mlstm/rglru/encdec): state + gates ~ 6*d_model;
@@ -314,13 +321,23 @@ class ActivationByteModel:
             d_ff_act = cfg.d_ff * ex["n_active_experts"]
 
         ratio = _WCTX_RATIO[bool(compact)]
+        # O(s^2) attention term (ROADMAP): the dense path materializes the
+        # (s, s) probability matrix per head in the saved residuals --
+        # n_heads * s extra stored floats per token.  The q-block-chunked
+        # path (models/modules.attention, s > 2 * block) remats inside the
+        # block scan, so long sequences keep O(s * d) residuals and the
+        # term vanishes exactly where it would have dominated.
+        dense_attn = seq_len <= 2 * _ATTN_CHUNK_BLOCK
+        attn_scores = cfg.n_heads * seq_len if dense_attn else 0.0
         act_per_kind = {}
         wctx_per_kind = {}
         for kinds in cfg.block_pattern:
             for kind in kinds:
                 if kind.startswith("attn") or kind == "mla":
-                    act_per_kind[kind] = 4 * cfg.d_model + 2 * kv
-                    wctx_per_kind[kind] = ratio["attn"] * act_per_kind[kind]
+                    act_per_kind[kind] = 4 * cfg.d_model + 2 * kv + attn_scores
+                    wctx_per_kind[kind] = ratio["attn"] * (
+                        4 * cfg.d_model + 2 * kv
+                    )
                 elif kind in ("mlp", "moe"):
                     act_per_kind[kind] = cfg.d_model + 2 * d_ff_act
                     wctx_per_kind[kind] = ratio["mlp"] * act_per_kind[kind]

@@ -35,6 +35,7 @@ __all__ = [
     "Schedule",
     "MemoryProfile",
     "ExecutionPlan",
+    "SteadyWindow",
     "CHANNEL_FWD_UP",
     "CHANNEL_FWD_DOWN",
     "CHANNEL_BWD_DOWN",
@@ -381,6 +382,36 @@ def _allocate_slots(
     return out, n_slots
 
 
+@dataclasses.dataclass(frozen=True)
+class SteadyWindow:
+    """A structurally periodic region of an :class:`ExecutionPlan`.
+
+    Ticks ``[start, start + period * repeats)`` repeat with ``period`` in
+    every *structural* table (op kind/chunk, the src/loss/last-B flags and
+    the send/recv channel pattern -- ``ExecutionPlan._STRUCT_TABLES``), so
+    each tick of the period compiles to the same code: same branch
+    dispatch, same collectives, same folded conditionals.  Index-valued
+    tables (microbatch ids, buffer slots) may still differ between periods
+    -- slot pools cycle with their own period -- and are fed to the scan
+    superstep as per-period inputs instead.  The specialized executor
+    unrolls warmup/cooldown and compiles the period once inside a
+    ``lax.scan``, bounding trace size by ``start + period + (n_ticks -
+    stop)`` instead of ``n_ticks``.
+    """
+
+    start: int
+    period: int
+    repeats: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.period * self.repeats
+
+    def saved_ticks(self) -> int:
+        """Ticks the scan superstep keeps out of the unrolled trace."""
+        return (self.repeats - 1) * self.period
+
+
 @dataclasses.dataclass
 class ExecutionPlan:
     """Static per-(stage, tick) tables driving the SPMD tick executor.
@@ -483,6 +514,135 @@ class ExecutionPlan:
         return tuple(
             d for d in range(N_CHANNELS) if (self.send_channel == d).any()
         )
+
+    # ------------------------------------------------------------------ #
+    # trace-time specialization metadata (consumed by the specialized
+    # executor mode; see DESIGN.md Sec. 8)
+    # ------------------------------------------------------------------ #
+    _TICK_TABLES = (
+        "op_kind",
+        "op_chunk",
+        "op_mb",
+        "op_in_slot",
+        "op_res_slot",
+        "op_wctx_slot",
+        "op_res_slot_joint",
+        "op_wctx_slot_joint",
+        "op_is_src",
+        "op_is_loss",
+        "op_is_last_b",
+        "op_sink_slot",
+        "op_sink_wctx_slot",
+        "send_channel",
+        "send_local",
+        "local_chunk",
+        "local_slot",
+        "local_is_grad",
+        "recv_valid",
+        "recv_chunk",
+        "recv_slot",
+    )
+
+    def tick_column(self, t: int) -> Dict[str, np.ndarray]:
+        """All per-tick table columns at tick ``t`` as host-side constants.
+
+        Shapes: ``(p,)`` for the per-op tables, ``(p, 4)`` for the recv
+        tables.  This is the *entire* input of one executor tick besides the
+        carried buffer state, so two ticks with equal columns (modulo a
+        uniform ``op_mb`` shift) compile to the same code.
+        """
+        return {name: getattr(self, name)[:, t] for name in self._TICK_TABLES}
+
+    def channel_liveness(self) -> np.ndarray:
+        """(T, 4) bool: does any stage send a message on channel d at tick t?
+
+        The channel-liveness contract: the specialized executor emits a
+        ``ppermute`` for exactly the True entries of this table (one per
+        live (tick, channel) pair), with the edge list of
+        :meth:`channel_edges`; the generic executor closes every used
+        channel every tick.  ``channel_live_ticks() ==
+        channel_liveness().sum(0)`` by construction.
+        """
+        live = np.zeros((self.n_ticks, N_CHANNELS), bool)
+        for d in range(N_CHANNELS):
+            live[:, d] = (self.send_channel == d).any(axis=0)
+        return live
+
+    def channel_edges(self, t: int, channel: int) -> List[Tuple[int, int]]:
+        """Exact (sender, receiver) ppermute pairs for one (tick, channel).
+
+        Empty when the channel is idle at tick ``t``.  Receivers are the
+        senders' ring neighbours in the channel's direction; stages outside
+        the list neither contribute nor receive a payload.
+        """
+        shift = {
+            CHANNEL_FWD_UP: +1,
+            CHANNEL_FWD_DOWN: -1,
+            CHANNEL_BWD_DOWN: -1,
+            CHANNEL_BWD_UP: +1,
+        }[channel]
+        senders = np.nonzero(self.send_channel[:, t] == channel)[0]
+        return [(int(s), int((s + shift) % self.p)) for s in senders]
+
+    # tables that must repeat *exactly* for ticks to share compiled code:
+    # they decide branch dispatch, conditional folding, and which
+    # collectives are emitted.  Index-valued tables (op_mb, slots) may vary
+    # between periods and are scanned over instead.
+    _STRUCT_TABLES = (
+        "op_kind",
+        "op_chunk",
+        "op_is_src",
+        "op_is_loss",
+        "op_is_last_b",
+        "send_channel",
+        "send_local",
+        "local_is_grad",
+        "recv_valid",
+    )
+
+    def steady_window(
+        self, min_repeats: int = 2, max_period: Optional[int] = None
+    ) -> Optional["SteadyWindow"]:
+        """Detect the longest structurally periodic steady-state region.
+
+        Column equality is required on ``_STRUCT_TABLES`` only (see
+        :class:`SteadyWindow`).  Returns the window saving the most
+        unrolled ticks, preferring shorter periods on ties; ``None`` when
+        nothing repeats at least ``min_repeats`` times.
+        """
+        T = self.n_ticks
+        min_repeats = max(2, min_repeats)
+        if max_period is None:
+            max_period = 8 * self.p + 16
+        max_period = min(max_period, T // min_repeats)
+        if max_period < 1:
+            return None
+
+        sigs = [
+            tuple(
+                np.ascontiguousarray(getattr(self, k)[:, t]).tobytes()
+                for k in self._STRUCT_TABLES
+            )
+            for t in range(T)
+        ]
+
+        best: Optional[SteadyWindow] = None
+        for k in range(1, max_period + 1):
+            t = 0
+            while t + k < T:
+                if sigs[t] != sigs[t + k]:
+                    t += 1
+                    continue
+                a = t
+                while t + k < T and sigs[t] == sigs[t + k]:
+                    t += 1
+                run = t - a  # matching pairs: ticks [a, a + run + k) repeat
+                n = (run + k) // k
+                if n >= min_repeats:
+                    saved = (n - 1) * k
+                    if best is None or saved > best.saved_ticks():
+                        best = SteadyWindow(start=a, period=k, repeats=n)
+        return best
 
 
 def compile_plan(schedule: Schedule) -> ExecutionPlan:

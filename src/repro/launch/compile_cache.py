@@ -1,0 +1,52 @@
+"""Persistent XLA compilation cache (repo-wide switch).
+
+The specialized executor trades compile time for step time (DESIGN.md
+Sec. 8); enabling JAX's persistent compilation cache makes that trade
+one-off per (program, plan, mode): repeated runs, the benchmark harness,
+and CI re-runs skip recompiles entirely.
+
+Controlled by ``$REPRO_JAX_CACHE_DIR``:
+  * unset        -> ``~/.cache/repro-zb/jax`` (created on demand),
+  * a path       -> that directory,
+  * ``off``/``0``/empty -> disabled.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+__all__ = ["enable_persistent_cache", "cache_dir_from_env"]
+
+_ENV = "REPRO_JAX_CACHE_DIR"
+_DEFAULT = os.path.join("~", ".cache", "repro-zb", "jax")
+
+
+def cache_dir_from_env() -> Optional[str]:
+    raw = os.environ.get(_ENV)
+    if raw is None:
+        raw = _DEFAULT
+    if raw.strip().lower() in ("", "off", "0", "none"):
+        return None
+    return os.path.expanduser(raw)
+
+
+def enable_persistent_cache(cache_dir: Optional[str] = None) -> Optional[str]:
+    """Point JAX's persistent compilation cache at a durable directory.
+
+    Idempotent; returns the directory in use (``None`` when disabled).
+    Thresholds are zeroed so even small tick programs are cached -- the
+    specialized executor's value is precisely that its *large* trace cost
+    is paid once.
+    """
+    import jax
+
+    if cache_dir is None:
+        cache_dir = cache_dir_from_env()
+    if cache_dir is None:
+        return None
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    return cache_dir

@@ -34,6 +34,17 @@ class TrainStepConfig:
     unroll: bool = False
     prune_channels: bool = True
     shard_channels: bool = False  # seq-shard pipe sends over tp (Perf log)
+    # executor compilation mode (DESIGN.md Sec. 8): "scan" (generic tick in
+    # lax.scan), "unroll" (generic tick unrolled), or "specialized"
+    # (trace-time specialization against the static plan: direct branch
+    # calls, exact-edge permutes, steady-state scan superstep).  None keeps
+    # the legacy `unroll` bool semantics.
+    executor_mode: Optional[str] = None
+    # donate params/opt state to the jitted step (they are consumed and
+    # re-emitted every step, so aliasing them halves the peak param+moment
+    # traffic); callers that re-read the input arrays after stepping must
+    # opt out.
+    donate: bool = True
 
 
 def param_specs(stacked, shared, binding: AxisBinding):
@@ -81,6 +92,7 @@ def build_train_step(
         tp_axis=binding.tp,
         shard_channels=tcfg.shard_channels,
         tp_size=binding.sizes(mesh)[1],
+        mode=tcfg.executor_mode,
     )
     grad_fn = execu.build_grad_fn()
     p, tp, dp = binding.sizes(mesh)
@@ -214,7 +226,10 @@ def build_train_step(
             out_specs=out_specs,
             check_rep=False,
         )
-        return jax.jit(fn)
+        # params/opt moments are pure pass-through state: donating them lets
+        # XLA update in place instead of double-buffering every leaf.
+        donate = (0, 1, 2, 3) if tcfg.donate else ()
+        return jax.jit(fn, donate_argnums=donate)
 
     return make, (in_specs, out_specs)
 
@@ -233,8 +248,13 @@ def build_serve_step(
     binding: AxisBinding,
     mode: str,
     cache_len: int,
+    donate: bool = True,
 ):
-    """Returns (make(side, caches) -> jitted step, program, cache_init)."""
+    """Returns (make(side, caches) -> jitted step, program, cache_init).
+
+    ``donate`` aliases the KV caches into the step (they are consumed and
+    re-emitted every call), halving the steady-state cache footprint.
+    """
     program, cache_init, cache_pspecs = build_serve_program(cfg, spec, placement, mode)
     plan = compile_infer_plan(placement, spec.m)
     execu = InferExecutor(program, plan, pipe_axis=binding.pipe)
@@ -275,6 +295,6 @@ def build_serve_step(
             out_specs=(out_spec, cache_spec),
             check_rep=False,
         )
-        return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=(3,) if donate else ())
 
     return make, program, cache_init

@@ -37,6 +37,7 @@ from ..data import DataConfig, SyntheticLM
 from ..models.lm import RunSpec, init_params
 from ..optim import adamw
 from ..runtime import DriverConfig, TrainDriver
+from .compile_cache import enable_persistent_cache
 from .mesh import AxisBinding
 from .steps import TrainStepConfig, build_train_step
 
@@ -140,6 +141,20 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--postval", default="within_step", choices=["within_step", "sync"])
     ap.add_argument(
+        "--executor",
+        default="specialized",
+        choices=["scan", "unroll", "specialized"],
+        help="executor compilation mode (DESIGN.md Sec. 8): 'specialized' "
+        "unrolls the tick stream against the static plan (fastest steps, "
+        "slowest first compile -- amortized by the persistent cache); "
+        "'scan' is the generic one-tick-body baseline",
+    )
+    ap.add_argument(
+        "--no-donate",
+        action="store_true",
+        help="keep params/opt-state buffers undonated (doubles their peak)",
+    )
+    ap.add_argument(
         "--memory-budget-mb",
         type=float,
         default=None,
@@ -150,8 +165,13 @@ def main():
     )
     args = ap.parse_args()
 
+    # repeated runs (and the driver's retry re-jit) skip recompiles
+    enable_persistent_cache()
     tcfg = TrainStepConfig(
-        adamw=adamw.AdamWConfig(lr=args.lr), postval_mode=args.postval
+        adamw=adamw.AdamWConfig(lr=args.lr),
+        postval_mode=args.postval,
+        executor_mode=args.executor,
+        donate=not args.no_donate,
     )
     cfg, spec, sched, make, mesh, binding = build_everything(
         args.arch,
@@ -217,8 +237,11 @@ def main():
     _, metrics = driver.run(args.steps)
     dt = time.time() - t0
     losses = [float(m["loss"]) for _, m in metrics]
-    print(f"steps={len(metrics)} wall={dt:.1f}s loss[0]={losses[0]:.4f} "
-          f"loss[-1]={losses[-1]:.4f} schedule={sched.name}")
+    tput = driver.throughput()
+    tput_s = f" steps/s={tput:.3f}" if tput else ""
+    print(f"steps={len(metrics)} wall={dt:.1f}s{tput_s} "
+          f"loss[0]={losses[0]:.4f} loss[-1]={losses[-1]:.4f} "
+          f"schedule={sched.name} executor={args.executor}")
     assert losses[-1] < losses[0], "loss must decrease on the synthetic stream"
 
 

@@ -216,6 +216,17 @@ class TrainDriver:
         self.step_fn = step_fn
         self.init_state = init_state
         self.data_at = data_at
+        # per-step wall seconds of the last run() (includes the first,
+        # compile-bearing step); feeds the perf trajectory -- see
+        # benchmarks/throughput.py
+        self.step_times: list = []
+
+    def throughput(self, skip: int = 1) -> Optional[float]:
+        """Steady-state steps/s of the last run, skipping warmup steps."""
+        times = self.step_times[skip:]
+        if not times:
+            return None
+        return len(times) / sum(times)
 
     def _restore_or_init(self):
         last = store.latest_step(self.cfg.ckpt_dir)
@@ -230,6 +241,7 @@ class TrainDriver:
         """fail_hook(step) may raise to simulate a node failure (tests)."""
         state, start = self._restore_or_init()
         metrics_log = []
+        self.step_times = []
         step = start
         retries = 0
         while step < n_steps:
@@ -237,8 +249,10 @@ class TrainDriver:
                 if fail_hook is not None:
                     fail_hook(step)
                 batch = self.data_at(step)
+                t0 = time.perf_counter()
                 state, metrics = self.step_fn(state, batch)
                 metrics = jax.tree_util.tree_map(np.asarray, metrics)
+                self.step_times.append(time.perf_counter() - t0)
                 metrics_log.append((step, metrics))
                 step += 1
                 retries = 0

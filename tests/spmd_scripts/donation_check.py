@@ -1,0 +1,67 @@
+"""Buffer-donation check for the jitted train step (subprocess, fake devices).
+
+Asserts that donating params/opt-state to the train step (the
+launch/steps.py default) is clean on this backend: no "donated buffers
+were not usable" warnings at execution, input buffers actually released,
+and a second chained step runs fine.  Prints OK on success.
+"""
+
+import os
+import warnings
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["REPRO_PLAN_CACHE_DIR"] = "off"
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core.schedules import compile_plan, zb_h1
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import AxisBinding
+from repro.launch.steps import TrainStepConfig, build_train_step
+from repro.launch.train import side_from_batch
+from repro.models.lm import RunSpec, init_params
+from repro.optim import adamw
+
+
+def main():
+    p, m, b, s = 4, 8, 1, 16
+    cfg = get_reduced("internlm2_1_8b")
+    sched = zb_h1(p, m)
+    plan = compile_plan(sched)
+    spec = RunSpec(p=p, n_chunks=1, microbatch=b, seq_len=s, m=m)
+    mesh = jax.make_mesh((p,), ("data",))
+    binding = AxisBinding(pipe="data", tp=None, dp=None)
+    make, _ = build_train_step(
+        cfg, spec, plan, sched.placement, mesh, binding,
+        TrainStepConfig(),  # donate=True is the default
+    )
+    data = SyntheticLM(DataConfig(global_batch=m * b, seq_len=s, vocab=cfg.vocab))
+    side = side_from_batch(data.batch_at(0), spec, cfg=cfg)
+    step = make(side)
+
+    stacked, shared = init_params(cfg, spec, sched.placement)
+    opt = adamw.init(stacked)
+    shared_opt = adamw.init(shared)
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out = step(stacked, shared, opt, shared_opt, side)
+        jax.block_until_ready(out)
+        # steady state: step N's outputs are step N+1's donated inputs --
+        # already in the executable's sharding, so donation must take
+        probe = jax.tree_util.tree_leaves(out[0])[0]
+        out2 = step(*out[:4], side)
+        jax.block_until_ready(out2)
+
+    donation_warnings = [
+        str(w.message) for w in caught if "donat" in str(w.message).lower()
+    ]
+    assert not donation_warnings, f"donation warnings: {donation_warnings}"
+    assert probe.is_deleted(), "donated param buffer was not released"
+    print("OK donation: no warnings, inputs released, loss",
+          float(out2[4]["loss"]))
+
+
+if __name__ == "__main__":
+    main()

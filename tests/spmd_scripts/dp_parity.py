@@ -58,6 +58,10 @@ def main():
     state = make_state(cfg, spec_ref, sched_ref.placement)
     side = side_from_batch(batch, spec_ref, cfg=cfg)
     step_ref = make_ref(side)
+    # snapshot before stepping: the jitted step donates its param inputs
+    init_leaves = [
+        np.asarray(a) for a in jax.tree_util.tree_leaves(state[0])
+    ]
     p_ref, sh_ref, _, _, m_ref = step_ref(*state, side)
 
     # ---- DP=2 over "pod": each pod gets half the microbatches ---------- #
@@ -73,9 +77,9 @@ def main():
     state_dp = make_state(cfg, spec_dp, sched_dp.placement)
     # identical init (same seed/config) as the reference
     for a, b in zip(
-        jax.tree_util.tree_leaves(state[0]), jax.tree_util.tree_leaves(state_dp[0])
+        init_leaves, jax.tree_util.tree_leaves(state_dp[0])
     ):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(a, np.asarray(b))
     # global side leaves: (dp * m, b, s), sharded over "pod" on dim 0
     side_dp = {
         "tokens": tokens.reshape(M_total, B_, S_),

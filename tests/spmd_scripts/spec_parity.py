@@ -1,0 +1,209 @@
+"""Specialized-executor parity, in a subprocess with fake devices.
+
+Usage: python spec_parity.py <schedule> <p> <m>
+
+Runs the same (program, plan) through the generic scan executor and the
+trace-time specialized executor and asserts the outputs are
+*bit-identical*: loss, every stage/chunk gradient, every shared gradient.
+Also checks the channel-liveness contract: the specialized program
+contains exactly one ppermute per live (tick, channel) pair of the plan
+(steady-window period counted once -- it compiles once inside the scan
+superstep), while the generic program closes every used channel in its
+single tick body.  Prints OK on success.
+"""
+
+import os
+import sys
+
+SCHED, P_, M_ = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+os.environ["REPRO_PLAN_CACHE_DIR"] = "off"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.executor import PipelineExecutor, PipelineProgram
+from repro.core.passes import auto_fbw
+from repro.core.schedules import (
+    compile_plan,
+    one_f_one_b,
+    v_half,
+    v_min,
+    zb_h1,
+    zb_h2,
+    zb_v,
+)
+
+D = 8
+B = 2
+jax.config.update("jax_enable_x64", True)
+DT = jnp.float64
+
+
+def layer_fn(p, x, side):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+
+def sink_fn(shared, y, side):
+    return jnp.sum((y @ shared["w_out"] - side["target"]) ** 2) / M_
+
+
+def src_fwd(shared, side_mb):
+    return side_mb["x0"] @ shared["w_in"]
+
+
+def src_bwd_w(shared, side_mb, dx):
+    return {
+        "w_in": side_mb["x0"].T @ dx,
+        "w_out": jnp.zeros_like(shared["w_out"]),
+    }
+
+
+def count_ppermutes(jaxpr) -> int:
+    """Static ppermute equations, recursing into sub-jaxprs (scan bodies,
+    cond branches) -- each counted once, like the compiler sees them."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "ppermute":
+            total += 1
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                total += count_ppermutes(sub)
+    return total
+
+
+def _sub_jaxprs(val):
+    import jax.core as jcore
+
+    if isinstance(val, jcore.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, jcore.Jaxpr):
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _sub_jaxprs(v)
+
+
+def main():
+    sched = {
+        "1f1b": lambda: one_f_one_b(P_, M_),
+        "zb-h1": lambda: zb_h1(P_, M_),
+        "zb-h2": lambda: zb_h2(P_, M_),
+        "zb-v": lambda: zb_v(P_, M_),
+        "v-min": lambda: v_min(P_, M_),
+        "v-half": lambda: v_half(P_, M_),
+    }[SCHED]()
+    plan = compile_plan(sched)
+    C = plan.n_chunks
+
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, P_ * C + 3)
+
+    def mk(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "w": (jax.random.normal(k1, (D, D)) * 0.5).astype(DT),
+            "b": (jax.random.normal(k2, (D,)) * 0.1).astype(DT),
+        }
+
+    stacked = tuple(
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[mk(keys[s * C + c]) for s in range(P_)]
+        )
+        for c in range(C)
+    )
+    shared = {
+        "w_in": (jax.random.normal(keys[-1], (D, D)) * 0.5).astype(DT),
+        "w_out": (jax.random.normal(keys[-2], (D, D)) * 0.5).astype(DT),
+    }
+    side = {
+        "x0": jax.random.normal(keys[-3], (M_, B, D)).astype(DT),
+        "target": jax.random.normal(
+            jax.random.PRNGKey(7), (M_, B, D)
+        ).astype(DT),
+    }
+    program = PipelineProgram(
+        chunks=[auto_fbw(layer_fn, name=f"chunk{c}") for c in range(C)],
+        src_fwd=src_fwd,
+        src_bwd_w=src_bwd_w,
+        sink=auto_fbw(sink_fn, name="sink"),
+        act_shape=(B, D),
+        act_dtype=DT,
+    )
+    mesh = jax.make_mesh((P_,), ("pipe",))
+    spec_st = tuple(
+        jax.tree_util.tree_map(lambda _: P("pipe"), sp) for sp in stacked
+    )
+
+    outs = {}
+    fns = {}
+    for mode in ("scan", "specialized"):
+        execu = PipelineExecutor(program, plan, pipe_axis="pipe", mode=mode)
+        grad_fn = execu.build_grad_fn()
+
+        def body(st, sh, sd):
+            local = tuple(
+                jax.tree_util.tree_map(lambda a: a[0], sp) for sp in st
+            )
+            g, sg, l = grad_fn(local, sh, sd)
+            g = tuple(
+                jax.tree_util.tree_map(lambda a: a[None], x) for x in g
+            )
+            return g, sg, l
+
+        fn = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec_st, P(), P()),
+            out_specs=(spec_st, P(), P()),
+            check_rep=False,
+        )
+        fns[mode] = fn
+        outs[mode] = jax.jit(fn)(stacked, shared, side)
+
+    ga, sga, la = outs["scan"]
+    gb, sgb, lb = outs["specialized"]
+    assert float(la) == float(lb), f"loss not bit-identical: {la} vs {lb}"
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ga), jax.tree_util.tree_leaves(gb)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(sga), jax.tree_util.tree_leaves(sgb)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # -- channel-liveness contract ---------------------------------------- #
+    live = plan.channel_liveness()  # (T, 4)
+    sw = plan.steady_window()
+    if sw is not None and sw.repeats >= 2:
+        in_window = np.zeros(plan.n_ticks, bool)
+        in_window[sw.start : sw.stop] = True
+        expected = int(live[~in_window].sum()) + int(
+            live[sw.start : sw.start + sw.period].sum()
+        )
+    else:
+        expected = int(live.sum())
+    jx = jax.make_jaxpr(fns["specialized"])(stacked, shared, side)
+    got = count_ppermutes(jx.jaxpr)
+    assert got == expected, (
+        f"specialized program has {got} ppermutes, plan implies {expected}"
+    )
+    jx_gen = jax.make_jaxpr(fns["scan"])(stacked, shared, side)
+    got_gen = count_ppermutes(jx_gen.jaxpr)
+    n_used = len(plan.used_channels())
+    assert got_gen == n_used, (
+        f"generic program has {got_gen} ppermutes, expected {n_used} "
+        "(one per used channel in the scanned tick body)"
+    )
+    print(
+        "OK", SCHED, P_, M_, float(la),
+        f"ppermutes={got} (generic tick body: {got_gen})",
+    )
+
+
+if __name__ == "__main__":
+    main()

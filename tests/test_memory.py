@@ -126,15 +126,54 @@ def test_timeline_activation_component():
 def test_byte_model_scaling():
     cfg = get_config("gpt3_1_5b")
     base = ActivationByteModel.from_config(cfg, microbatch=1, seq_len=2048, p=4)
-    twice_seq = ActivationByteModel.from_config(cfg, microbatch=1, seq_len=4096, p=4)
     twice_mb = ActivationByteModel.from_config(cfg, microbatch=2, seq_len=2048, p=4)
-    assert twice_seq.m_b_bytes == pytest.approx(2 * base.m_b_bytes)
     assert twice_mb.m_b_bytes == pytest.approx(2 * base.m_b_bytes)
+    # beyond the dense-attention threshold (s > 2048) the chunked path
+    # remats the scores, so sequence scaling is exactly linear there
+    long1 = ActivationByteModel.from_config(cfg, microbatch=1, seq_len=4096, p=4)
+    long2 = ActivationByteModel.from_config(cfg, microbatch=1, seq_len=8192, p=4)
+    assert long2.m_b_bytes == pytest.approx(2 * long1.m_b_bytes)
     # tensor parallelism shards the stored activations
     tp2 = ActivationByteModel.from_config(cfg, 1, 2048, 4, tp_size=2)
     assert tp2.m_b_bytes == pytest.approx(base.m_b_bytes / 2)
     # W-context is a strict subset of the stored activations
     assert 0 < base.m_w_bytes < base.m_b_bytes
+
+
+def test_byte_model_attn_scores_quadratic():
+    """Dense short-seq attention stores the O(s^2) probs (ROADMAP item);
+    chunked long-seq attention remats them.  Checked at two sequence
+    lengths: the per-token delta is exactly n_heads * ds elements."""
+    from repro.models.lm import ArchConfig
+
+    cfg = ArchConfig(
+        name="toy-dense-attn",
+        family="dense",
+        n_layers=4,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=256,
+        vocab=128,
+        block_pattern=(("attn", "mlp"),),
+    )
+    s1, s2 = 256, 512
+    m1 = ActivationByteModel.from_config(cfg, microbatch=2, seq_len=s1, p=2)
+    m2 = ActivationByteModel.from_config(cfg, microbatch=2, seq_len=s2, p=2)
+    per_tok1 = m1.per_layer_act / m1.tokens
+    per_tok2 = m2.per_layer_act / m2.tokens
+    assert per_tok2 - per_tok1 == pytest.approx(
+        cfg.n_heads * (s2 - s1) * m1.dtype_bytes
+    )
+    # super-linear (quadratic term) in the dense regime...
+    assert m2.m_b_bytes > 2 * m1.m_b_bytes
+    # ...and gone in the chunked regime: per-token attn bytes at 4096
+    # drop back to the dense-free price
+    m_long = ActivationByteModel.from_config(
+        cfg, microbatch=2, seq_len=4096, p=2
+    )
+    per_tok_long = m_long.per_layer_act / m_long.tokens
+    assert per_tok_long < per_tok1
 
 
 # --------------------------------------------------------------------- #

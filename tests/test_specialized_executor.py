@@ -1,0 +1,122 @@
+"""Trace-time specialized executor: parity, liveness, steady windows.
+
+The specialized mode (DESIGN.md Sec. 8) must be a pure compilation-mode
+change: bit-identical loss and gradients vs the generic scan executor on
+every schedule family, with exactly the collectives the plan implies.
+SPMD cases run in subprocesses so fake-device XLA flags never leak.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.schedules import (
+    compile_plan,
+    one_f_one_b,
+    v_half,
+    v_min,
+    zb_h1,
+    zb_v,
+)
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "spmd_scripts")
+
+CASES = [
+    ("1f1b", 4, 8),
+    ("zb-h1", 4, 8),
+    ("zb-v", 4, 8),
+    ("v-min", 4, 8),
+    ("v-half", 4, 8),
+    ("1f1b", 4, 12),  # long steady state: scan-superstep path
+]
+
+
+def _run(script, *args):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, script), *map(str, args)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+    return out.stdout
+
+
+@pytest.mark.parametrize("sched,p,m", CASES)
+def test_specialized_bit_parity_and_liveness(sched, p, m):
+    """Bit-identical grads/loss + ppermute count == plan channel liveness."""
+    _run("spec_parity.py", sched, p, m)
+
+
+def test_donation_clean():
+    """Donated params/opt-state: no warnings, inputs actually released."""
+    _run("donation_check.py")
+
+
+# --------------------------------------------------------------------- #
+# steady-window detection (pure host-side, no devices)
+# --------------------------------------------------------------------- #
+def test_steady_window_found_and_valid():
+    plan = compile_plan(one_f_one_b(4, 12))
+    sw = plan.steady_window()
+    assert sw is not None, "1F1B steady state must be detected"
+    assert sw.repeats >= 2
+    assert sw.stop <= plan.n_ticks
+    # structural tables repeat exactly with the period inside the window
+    for name in plan._STRUCT_TABLES:
+        tab = getattr(plan, name)
+        for i in range(sw.period):
+            cols = [
+                tab[:, sw.start + i + j * sw.period] for j in range(sw.repeats)
+            ]
+            for c in cols[1:]:
+                np.testing.assert_array_equal(c, cols[0], err_msg=name)
+
+
+def test_steady_window_saves_most_of_1f1b():
+    """At m >> p the steady window must cover the bulk of the tick grid."""
+    plan = compile_plan(one_f_one_b(4, 24))
+    sw = plan.steady_window()
+    assert sw is not None
+    assert sw.saved_ticks() > plan.n_ticks // 3
+
+
+def test_channel_liveness_consistent():
+    for build in (one_f_one_b, zb_h1, zb_v, v_min, v_half):
+        plan = compile_plan(build(4, 8))
+        live = plan.channel_liveness()
+        assert live.shape == (plan.n_ticks, 4)
+        np.testing.assert_array_equal(
+            live.sum(axis=0), plan.channel_live_ticks()
+        )
+        # edges exist exactly on live (tick, channel) pairs and are exact
+        for t in range(plan.n_ticks):
+            for d in range(4):
+                edges = plan.channel_edges(t, d)
+                assert bool(edges) == bool(live[t, d])
+                for src, dst in edges:
+                    assert plan.send_channel[src, t] == d
+                    assert plan.recv_valid[dst, t, d]
+
+
+def test_executor_mode_validation():
+    from repro.core.executor import PipelineExecutor
+
+    plan = compile_plan(one_f_one_b(2, 2))
+
+    class _Prog:
+        def n_chunks(self):
+            return 1
+
+    with pytest.raises(ValueError, match="unknown executor mode"):
+        PipelineExecutor(_Prog(), plan, mode="turbo")
